@@ -1,0 +1,62 @@
+"""Table 2 proxy: convergence quality of dense vs SPION-C/F/CF vs fixed
+patterns on generated ListOps (reduced scale; the real LRA datasets are not
+available offline — DESIGN.md §6). Reports train-loss after a fixed budget;
+lower = better. SPION variants must stay within noise of dense."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pattern import generate_pattern
+from repro.core.sparse_attention import bcsr_from_blockmask
+from repro.core.variants import fixed_pattern_tables
+from repro.data.listops import VOCAB_SIZE, make_listops_batch
+from repro.launch.steps import make_train_step
+from repro.models.registry import build
+from repro.optim import adamw_init
+
+STEPS = 30
+L, BLOCK, BATCH = 256, 32, 8
+
+
+def _train(cfg, tables, steps=STEPS, seed=0):
+    bundle = build(cfg)
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.ndim >= 2 else x,
+        bundle.init(jax.random.key(seed)))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, spion=tables is not None, lr=1e-3, block=BLOCK))
+    rng = np.random.default_rng(seed)
+    losses = []
+    for i in range(steps):
+        xs, ys = make_listops_batch(rng, BATCH, L + 1, depth=4)
+        batch = {"tokens": jnp.asarray(xs[:, :-1]),
+                 "labels": jnp.asarray(xs[:, 1:])}
+        args = (params, opt, batch, jnp.int32(i)) + ((tables,) if tables is not None else ())
+        params, opt, m = step(*args)
+        losses.append(float(m["loss"]))
+    return float(np.mean(losses[-5:]))
+
+
+def rows(out):
+    cfg = get_config("spion-lra").replace(num_layers=2, d_ff=128,
+                                          vocab_size=VOCAB_SIZE)
+    n = L // BLOCK
+    rng = np.random.default_rng(0)
+    scores = rng.random((L, L))
+    base = _train(cfg, None)
+    out("accuracy.dense_loss", round(base, 4), "dense baseline (LM loss on ListOps)")
+    for variant in ("c", "f", "cf"):
+        pat = generate_pattern(scores, variant=variant, conv_filter_size=7,
+                               block_size=BLOCK, alpha_quantile=0.85)
+        b = bcsr_from_blockmask(pat, BLOCK)
+        tabs = {"col_idx": jnp.stack([b.col_idx] * cfg.num_layers),
+                "nvalid": jnp.stack([b.nvalid] * cfg.num_layers),
+                "block": BLOCK}
+        l = _train(cfg, tabs)
+        out(f"accuracy.spion_{variant}_loss", round(l, 4),
+            f"delta_vs_dense={l-base:+.4f} density={pat.mean():.3f}")
+    tabs = fixed_pattern_tables("bigbird", L, BLOCK, cfg.num_layers)
+    out("accuracy.bigbird_loss", round(_train(cfg, tabs), 4), "fixed-pattern baseline")

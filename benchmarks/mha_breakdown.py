@@ -1,0 +1,78 @@
+"""Fig. 6: breakdown of MHA operation times — dense GEMM/softmax/GEMM vs
+sparse SDDMM/sparse-softmax/SpMM.
+
+CPU wall-times of the jitted jnp paths (the GPU numbers in the paper are
+hardware-specific; the *structure* — softmax dominating dense MHA, every
+sparse op beating its dense counterpart at 90%+ sparsity — is what this
+reproduces). Derived column reports op-count ratios from §4.4.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.sparse_attention import bcsr_from_blockmask
+from repro.kernels import ref as kref
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def rows(out, L=1024, D=64, block=32, density=0.08):
+    B, H = 2, 2
+    N = B * H
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (N, L, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (N, L, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (N, L, D))
+    rng = np.random.default_rng(0)
+    n = L // block
+    mask = rng.random((n, n)) < density
+    np.fill_diagonal(mask, True)
+    bcsr = bcsr_from_blockmask(mask, block)
+    col = jnp.maximum(bcsr.col_idx, 0)
+
+    # dense pipeline
+    gemm1 = jax.jit(lambda q, k: jnp.einsum("nqd,nkd->nqk", q, k) / np.sqrt(D))
+    soft = jax.jit(lambda s: jax.nn.softmax(s, -1))
+    gemm2 = jax.jit(lambda p, v: jnp.einsum("nqk,nkd->nqd", p, v))
+    s_dense = gemm1(q, k)
+    p_dense = soft(s_dense)
+    t_gemm1 = _time(gemm1, q, k)
+    t_soft = _time(soft, s_dense)
+    t_gemm2 = _time(gemm2, p_dense, v)
+
+    # sparse pipeline (jnp reference path of the kernels)
+    sddmm = jax.jit(lambda q, k: kref.sddmm_ref(q, k, bcsr.col_idx, block=block))
+    s_sp = sddmm(q, k)
+    ssoft = jax.jit(lambda s: kref.sparse_softmax_ref(s, bcsr.col_idx,
+                                                      block=block, seq_len=L))
+    p_sp = ssoft(s_sp)
+    spmm = jax.jit(lambda p, v: kref.spmm_ref(p, v, bcsr.col_idx))
+    t_sddmm = _time(sddmm, q, k)
+    t_ssoft = _time(ssoft, s_sp)
+    t_spmm = _time(spmm, p_sp, v)
+
+    out("mha.dense_gemm_qk_us", round(t_gemm1, 1), "")
+    out("mha.dense_softmax_us", round(t_soft, 1), "")
+    out("mha.dense_gemm_av_us", round(t_gemm2, 1), "")
+    out("mha.sparse_sddmm_us", round(t_sddmm, 1),
+        f"speedup={t_gemm1 / t_sddmm:.2f}x (paper: 2.55x image)")
+    out("mha.sparse_softmax_us", round(t_ssoft, 1),
+        f"speedup={t_soft / t_ssoft:.2f}x (paper: 42.4x image)")
+    out("mha.sparse_spmm_us", round(t_spmm, 1),
+        f"speedup={t_gemm2 / t_spmm:.2f}x (paper: 2.54x image)")
+    tot_d = t_gemm1 + t_soft + t_gemm2
+    tot_s = t_sddmm + t_ssoft + t_spmm
+    out("mha.total_speedup", round(tot_d / tot_s, 2),
+        f"density={density} dense={tot_d:.0f}us sparse={tot_s:.0f}us")

@@ -1,0 +1,40 @@
+"""§Roofline reader: aggregates artifacts/dryrun/*.json into the roofline
+table (compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS
+ratio). Run the dry-run first: PYTHONPATH=src python -m repro.launch.dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh="single"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(ARTS, f"*__{mesh}__*.json"))):
+        try:
+            cells.append(json.load(open(p)))
+        except Exception:
+            pass
+    return cells
+
+
+def rows(out):
+    cells = load_cells("single")
+    if not cells:
+        out("roofline.missing", 0, "run repro.launch.dryrun first")
+        return
+    ok = [c for c in cells if c.get("status") == "ok" and "roofline" in c]
+    for c in ok:
+        r = c["roofline"]
+        t_exec = max(r.values())
+        frac = {"t_compute": "compute", "t_memory": "memory",
+                "t_collective": "collective"}[c["dominant"]]
+        out(f"roofline.{c['arch']}.{c['shape']}.{c['mode']}",
+            round(t_exec * 1e6, 1),
+            f"bound={frac} tc={r['t_compute']*1e6:.0f}us tm={r['t_memory']*1e6:.0f}us "
+            f"tcoll={r['t_collective']*1e6:.0f}us useful={c.get('useful_fraction') or 0:.2f} "
+            f"mem={c['memory'].get('per_device_gb', float('nan')):.1f}GiB")
+    sk = [c for c in cells if c.get("status") == "skipped"]
+    out("roofline.cells_ok", len(ok), f"skipped={len(sk)} (documented)")

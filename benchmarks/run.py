@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+  opcount          §4.4 exact op-count identities (Table-in-text)
+  mha_breakdown    Fig. 6 dense vs sparse MHA op times
+  sparsity_ratio   Fig. 7 step time vs sparsity ratio
+  memory_footprint Fig. 5 memory column
+  accuracy_proxy   Table 2 convergence proxy (generated ListOps)
+  roofline         §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accuracy_proxy, memory_footprint, mha_breakdown,
+                            opcount, roofline, sparsity_ratio)
+    mods = [("opcount", opcount), ("mha_breakdown", mha_breakdown),
+            ("sparsity_ratio", sparsity_ratio),
+            ("memory_footprint", memory_footprint),
+            ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+
+    def out(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    for name, mod in mods:
+        if only and name != only:
+            continue
+        try:
+            mod.rows(out)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc(file=sys.stderr)
+            out(f"{name}.ERROR", 0, str(e)[:120])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 7: training time + accuracy proxy vs sparsity ratio (SPION-C,
+ListOps geometry). Wall-time per train step of the sparse path at each ratio,
+plus the §4.4 op-count at that ratio (derived column)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pattern import generate_pattern
+from repro.core.sparse_attention import bcsr_from_blockmask
+from repro.launch.steps import make_train_step
+from repro.models.registry import build
+from repro.optim import adamw_init
+from benchmarks.opcount import dense_ops, sparse_ops
+
+
+def rows(out, L=512, block=32):
+    cfg = get_config("spion-lra").replace(num_layers=2, d_ff=128)
+    bundle = build(cfg)
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.ndim >= 2 else x,
+        bundle.init(jax.random.key(0)))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, spion=True, block=block))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 100, (4, L)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 100, (4, L)), jnp.int32)}
+    n = L // block
+    scores = rng.random((L, L))
+
+    for alpha in (0.70, 0.80, 0.90, 0.96, 0.98):
+        pat = generate_pattern(scores, variant="c", block_size=block,
+                               alpha_quantile=alpha)
+        K = int(pat.sum(1).max())
+        b = bcsr_from_blockmask(pat, block, max_k=K)
+        tables = {"col_idx": jnp.stack([b.col_idx] * cfg.num_layers),
+                  "nvalid": jnp.stack([b.nvalid] * cfg.num_layers),
+                  "block": block}
+        p2, o2, m = step(params, opt, batch, jnp.int32(0), tables)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for i in range(3):
+            p2, o2, m = step(params, opt, batch, jnp.int32(i), tables)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        C = int(pat.mean() * L * L)
+        out(f"sparsity.alpha{int(alpha*100)}_step_us", round(us, 0),
+            f"density={pat.mean():.3f} opcount_reduction="
+            f"{dense_ops(L,64)/max(sparse_ops(C,L,64),1):.2f}x")

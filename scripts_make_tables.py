@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+ARTS = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["internvl2-2b", "whisper-tiny", "qwen2.5-14b", "mistral-large-123b",
+         "command-r-35b", "qwen2-7b", "rwkv6-7b", "mixtral-8x7b",
+         "arctic-480b", "zamba2-1.2b"]
+
+
+def load(arch, shape, mesh, mode):
+    p = os.path.join(ARTS, f"{arch}__{shape}__{mesh}__{mode}.json")
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def fmt_cell(c):
+    if c is None:
+        return "—"
+    if c["status"] == "skipped":
+        return "skip"
+    if c["status"] == "error":
+        return "ERR"
+    return "ok"
+
+
+def dryrun_table():
+    print("### Compile matrix (ok = lower+compile succeeded; bytes/device from memory_analysis)\n")
+    print("| arch | " + " | ".join(f"{s} (single / multi)" for s in SHAPES) + " |")
+    print("|---|" + "---|" * len(SHAPES))
+    for a in ARCHS:
+        row = [a]
+        for s in SHAPES:
+            cs = load(a, s, "single", "dense")
+            cm = load(a, s, "multi", "dense")
+            lab = fmt_cell(cs)
+            if cs and cs["status"] == "ok":
+                lab += f" {cs['memory'].get('per_device_gb', float('nan')):.1f}G"
+            lab += " / " + fmt_cell(cm)
+            if cm and cm["status"] == "ok":
+                lab += f" {cm['memory'].get('per_device_gb', float('nan')):.1f}G"
+            row.append(lab)
+        print("| " + " | ".join(row) + " |")
+    print()
+
+
+def roofline_table(mode):
+    print(f"### Roofline — {mode} (per-device terms in ms; dominant in bold)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | bound | useful | mem GiB | n_micro |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            c = load(a, s, "single", mode)
+            if c is None or c["status"] != "ok" or "roofline" not in c:
+                continue
+            r = c["roofline"]
+            dom = c["dominant"].replace("t_", "")
+            uf = c.get("useful_fraction")
+            print(f"| {a} | {s} | {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+                  f"| {r['t_collective']*1e3:.2f} | {dom} | "
+                  f"{uf:.2f} | {c['memory'].get('per_device_gb', float('nan')):.1f} "
+                  f"| {c.get('n_micro', 1)} |" if uf is not None else
+                  f"| {a} | {s} | {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+                  f"| {r['t_collective']*1e3:.2f} | {dom} | n/a "
+                  f"| {c['memory'].get('per_device_gb', float('nan')):.1f} "
+                  f"| {c.get('n_micro', 1)} |")
+    print()
+
+
+def skip_table():
+    print("### Documented skips\n")
+    seen = set()
+    for p in sorted(glob.glob(os.path.join(ARTS, "*__single__dense.json"))):
+        c = json.load(open(p))
+        if c.get("status") == "skipped":
+            key = (c["cell"].split("__")[0], c["cell"].split("__")[1])
+            if key not in seen:
+                seen.add(key)
+                print(f"- `{key[0]} × {key[1]}`: {c['reason']}")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_table()
+    skip_table()
+    roofline_table("dense")
+    roofline_table("sparse")

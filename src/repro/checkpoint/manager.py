@@ -1,0 +1,118 @@
+"""Checkpointing: atomic, mesh-agnostic, async-capable.
+
+Format: one directory per step containing
+  - arrays.npz       every pytree leaf, fully replicated (gathered) view
+  - meta.msgpack     treedef, step, extra host state (SPION phase, rng, ...)
+  - DONE             commit marker (atomic rename makes the step visible)
+
+Mesh-agnostic restore: leaves are saved unsharded, so a checkpoint taken on
+256 chips restores onto 512 (elastic re-scale) — the caller re-applies its
+own shardings via device_put. Async save: serialisation happens on a
+background thread after jax.device_get (the step loop is blocked only for
+the host transfer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, str(treedef)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Gather to host, then (a)synchronously serialise + commit."""
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._thread is not None:
+            self._thread.join()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extra or {}), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_tree, extra or {})
+
+    def _write(self, step: int, host_tree, extra: dict):
+        tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = _flatten(host_tree)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+            f.write(msgpack.packb({"step": step, "treedef": treedef,
+                                   "extra": json.dumps(extra)}))
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_") and \
+                    os.path.exists(os.path.join(self.dir, name, "DONE")):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, target: Any = None,
+                shardings: Any = None):
+        """Returns (tree, step, extra). `target` supplies the treedef;
+        `shardings` (optional pytree of NamedSharding) re-shards on load."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+        if target is not None:
+            treedef = jax.tree_util.tree_structure(target)
+            tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        else:
+            raise ValueError("restore requires a `target` pytree for the treedef")
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        extra = json.loads(meta["extra"]) if meta.get("extra") else {}
+        return tree, meta["step"], extra

@@ -1,0 +1,29 @@
+"""Architecture registry. Importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    SpionConfig,
+    SSMConfig,
+    all_configs,
+    get_config,
+    register,
+)
+
+# one module per assigned architecture (+ the paper's own model)
+from repro.configs import (  # noqa: F401,E402
+    arctic_480b,
+    command_r_35b,
+    internvl2_2b,
+    mistral_large_123b,
+    mixtral_8x7b,
+    qwen2_5_14b,
+    qwen2_7b,
+    rwkv6_7b,
+    spion_lra,
+    whisper_tiny,
+    zamba2_1_2b,
+)
+
+ARCH_IDS = sorted(all_configs().keys())

@@ -1,0 +1,4 @@
+"""SPION core: conv-flood-fill pattern generation, 3-phase controller,
+block-sparse attention, and the paper's comparison variants."""
+from repro.core.pattern import generate_pattern, pattern_to_bcsr  # noqa: F401
+from repro.core.sparse_attention import BCSR, bcsr_attention, bcsr_from_blockmask, full_bcsr  # noqa: F401

@@ -1,0 +1,157 @@
+"""Block-sparse (padded-BCSR) multi-head attention — the SPION sparse phase.
+
+The sparsity pattern is a per-layer table:
+    col_idx : (nrb, K) int32   active column-block ids per row-block, pad = -1
+    nvalid  : (nrb,)   int32   number of valid entries per row (b_cnt / B)
+K is the padded max-blocks-per-row; static => jit-able and load-balanced.
+
+Semantics are the paper's (Alg. 5/6): S = softmax_P(QK^T/sqrt(hd)) V where the
+softmax denominator counts pruned positions as exp(0 - max) each (Alg. 6
+line 15: sum += exp(-max) * (L - b_cnt)). Causal archs (beyond-paper
+extension) count only pruned *causal* positions.
+
+Two executions:
+  - `bcsr_attention` — pure-jnp gather path (CPU tests, GSPMD dry-run).
+  - kernels/ops.py   — fused Pallas kernel (TPU target), same signature.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BCSR(NamedTuple):
+    col_idx: jnp.ndarray  # (nrb, K) int32, -1 padded
+    nvalid: jnp.ndarray   # (nrb,) int32
+    block: int            # B
+    seq_len: int          # L
+
+
+def bcsr_from_blockmask(mask: np.ndarray, block: int, max_k: int | None = None) -> BCSR:
+    """Host-side: dense block mask (nrb, ncb) bool -> padded BCSR."""
+    mask = np.asarray(mask, bool)
+    nrb, ncb = mask.shape
+    counts = mask.sum(axis=1)
+    K = int(max_k if max_k is not None else max(int(counts.max()), 1))
+    col = np.full((nrb, K), -1, np.int32)
+    for r in range(nrb):
+        idx = np.nonzero(mask[r])[0][:K]
+        col[r, : len(idx)] = idx
+    return BCSR(jnp.asarray(col), jnp.asarray(np.minimum(counts, K).astype(np.int32)),
+                block, nrb * block)
+
+
+def full_bcsr(seq_len: int, block: int) -> BCSR:
+    """All-blocks-active BCSR (sparse path must equal dense attention)."""
+    nrb = seq_len // block
+    col = np.tile(np.arange(nrb, dtype=np.int32), (nrb, 1))
+    return BCSR(jnp.asarray(col), jnp.full((nrb,), nrb, np.int32), block, seq_len)
+
+
+def bcsr_attention(cfg, q, k, v, bcsr: BCSR, *, interpret_kernel=None,
+                   row_chunk=None):
+    """q (B,S,H,hd); k,v (B,S,KV,hd); returns (B,S,H,hd).
+
+    Pure-jnp padded-BCSR attention with the paper's sparse-softmax
+    zero-correction, chunked over row-blocks with per-chunk remat so the
+    gathered block tensors are never all resident (the Pallas kernel is the
+    TPU-native version; this path is its GSPMD-compatible stand-in).
+    """
+    nrb_total = q.shape[1] // bcsr.block
+    rc = row_chunk or max(1, min(nrb_total, 2**21 // (bcsr.block * bcsr.block *
+                                                      max(bcsr.col_idx.shape[1], 1))))
+    if nrb_total and rc < nrb_total and nrb_total % rc == 0:
+        nch = nrb_total // rc
+        col = bcsr.col_idx.reshape(nch, rc, -1)
+        nval = bcsr.nvalid.reshape(nch, rc)
+        B_, _, H_, hd_ = q.shape
+        qch = jnp.moveaxis(
+            q.reshape(B_, nch, rc * bcsr.block, H_, hd_), 1, 0)
+        roff = (jnp.arange(nch) * rc).astype(jnp.int32)
+
+        @jax.checkpoint
+        def one(args):
+            qc, cc, nv, off = args
+            return _bcsr_rows(cfg, qc, k, v,
+                              BCSR(cc, nv, bcsr.block, bcsr.seq_len), off)
+
+        # scan-with-unroll, not lax.map: see dense_attention (cost_analysis
+        # counts a rolled body once)
+        _, out = jax.lax.scan(lambda _, x: (None, one(x)), None,
+                              (qch, col, nval, roff),
+                              unroll=min(cfg.scan_unroll, nch))
+        return jnp.moveaxis(out, 0, 1).reshape(q.shape)
+    return _bcsr_rows(cfg, q, k, v, bcsr, jnp.int32(0))
+
+
+def _bcsr_rows(cfg, q, k, v, bcsr: BCSR, row_offset):
+    """BCSR attention for the row-blocks covered by q (absolute row-block
+    index of q's first block = row_offset)."""
+    B, Sq, H, hd = q.shape
+    L = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    Bb = bcsr.block
+    nrb = Sq // Bb          # row-blocks in THIS chunk
+    K = bcsr.col_idx.shape[1]
+    col = bcsr.col_idx      # (nrb, K)
+    colc = jnp.maximum(col, 0)
+
+    qb = q.reshape(B, nrb, Bb, KV, G, hd)
+    kb = k.reshape(B, L // Bb, Bb, KV, hd)
+    vb = v.reshape(B, L // Bb, Bb, KV, hd)
+    # gather active key/value blocks per row-block: (B, nrb, K, Bb, KV, hd)
+    kg = kb[:, colc]
+    vg = vb[:, colc]
+
+    # scores: (B, KV, G, nrb, Bb, K, Bb)
+    s = jnp.einsum("brpkgh,brcqkh->bkgrpcq", qb, kg).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+
+    # masks: padded blocks, causal / sliding-window within active blocks
+    abs_rows = (row_offset + jnp.arange(nrb)) * Bb
+    qpos = abs_rows[:, None, None, None] + jnp.arange(Bb)[None, :, None, None]
+    kpos = (colc * Bb)[:, None, :, None] + jnp.arange(Bb)[None, None, None, :]
+    ok = (col >= 0)[:, None, :, None]
+    if cfg.causal:
+        ok = ok & (qpos >= kpos)
+    if cfg.sliding_window:
+        ok = ok & (qpos - kpos < cfg.sliding_window)
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+
+    sflat = s.reshape(B, KV, G, nrb, Bb, K * Bb)
+    mx = jnp.max(sflat, axis=-1, keepdims=True)
+    mx = jnp.maximum(mx, -1e30)  # rows with nothing active
+    ex = jnp.where(jnp.isneginf(sflat), 0.0, jnp.exp(sflat - mx))
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+
+    # paper Alg. 6 line 15: pruned positions contribute exp(0 - max) each.
+    ok_full = jnp.broadcast_to(ok, (nrb, Bb, K, Bb))
+    stored = jnp.sum(ok_full[None, None, None].astype(jnp.int32), axis=(-2, -1)) \
+        .reshape(1, 1, 1, nrb, Bb, 1)  # valid stored entries per row
+    if cfg.causal:
+        abs_pos = abs_rows[:, None] + jnp.arange(Bb)[None, :]
+        row_total = (abs_pos + 1)[None, None, None, ..., None]
+        if cfg.sliding_window:
+            row_total = jnp.minimum(row_total, cfg.sliding_window)
+    else:
+        row_total = jnp.full((1, 1, 1, nrb, Bb, 1), L)
+    zeros_cnt = jnp.maximum(row_total - stored, 0).astype(jnp.float32)
+    denom = denom + zeros_cnt * jnp.exp(-mx)
+
+    probs = (ex / denom).astype(q.dtype)
+    probs = probs.reshape(B, KV, G, nrb, Bb, K, Bb)
+    out = jnp.einsum("bkgrpcq,brcqkh->brpkgh", probs, vg)
+    return out.reshape(B, Sq, H, hd)
+
+
+def bcsr_attention_ops(cfg, bcsr: BCSR):
+    """Analytic op count of the sparse path (paper §4.4 formula, per head):
+    2*C*(2*hd+1) - L*(hd+1) with C = stored element count."""
+    C = int(jnp.sum(bcsr.nvalid)) * bcsr.block * bcsr.block
+    L = bcsr.seq_len
+    hd = cfg.resolved_head_dim
+    return 2 * C * (2 * hd + 1) - L * (hd + 1)

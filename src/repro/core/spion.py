@@ -1,0 +1,129 @@
+"""SPION three-phase training controller (paper Alg. 2 / Fig. 2).
+
+Phases:  dense  --(Frobenius criterion)-->  pattern generation  -->  sparse.
+
+The controller is host-side state; the jitted step only sees (a) a `capture`
+kwarg during the dense phase and (b) stacked BCSR tables during the sparse
+phase. Pattern generation runs once, on rank-0, between epochs, and the tiny
+BCSR tables (K * L/B int32 per layer) are broadcast as step inputs — no
+scaling cliff at 1000+ nodes (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SpionConfig
+from repro.core.pattern import diagonal_filter, generate_pattern
+from repro.core.sparse_attention import bcsr_from_blockmask
+
+
+@dataclass
+class SpionState:
+    phase: str = "dense"                     # "dense" | "sparse"
+    epoch: int = 0
+    frob_hist: List[np.ndarray] = field(default_factory=list)   # per-epoch (Ly,)
+    dist_hist: List[float] = field(default_factory=list)
+    tables: Optional[dict] = None            # stacked BCSR for the jitted step
+    density: Optional[float] = None
+
+    def to_py(self):
+        return {
+            "phase": self.phase,
+            "epoch": self.epoch,
+            "frob_hist": [h.tolist() for h in self.frob_hist],
+            "dist_hist": list(self.dist_hist),
+            "density": self.density,
+            "tables": None if self.tables is None else {
+                "col_idx": np.asarray(self.tables["col_idx"]).tolist(),
+                "nvalid": np.asarray(self.tables["nvalid"]).tolist(),
+                "block": int(self.tables["block"]),
+            },
+        }
+
+    @staticmethod
+    def from_py(d):
+        st = SpionState(phase=d["phase"], epoch=d["epoch"],
+                        dist_hist=list(d["dist_hist"]), density=d.get("density"))
+        st.frob_hist = [np.asarray(h) for h in d["frob_hist"]]
+        if d.get("tables"):
+            st.tables = {
+                "col_idx": jnp.asarray(np.asarray(d["tables"]["col_idx"], np.int32)),
+                "nvalid": jnp.asarray(np.asarray(d["tables"]["nvalid"], np.int32)),
+                "block": int(d["tables"]["block"]),
+            }
+        return st
+
+
+class SpionController:
+    def __init__(self, spion_cfg: SpionConfig, *, causal: bool, seq_len: int):
+        self.cfg = spion_cfg
+        self.causal = causal
+        self.seq_len = seq_len
+        self.filt = jnp.asarray(diagonal_filter(spion_cfg.conv_filter_size), jnp.float32)
+
+    # -- jitted-step kwargs ---------------------------------------------------
+
+    def capture_kwargs(self, state: SpionState):
+        """`capture=` kwarg for forward() during the dense phase (else None)."""
+        if not self.cfg.enabled or state.phase != "dense":
+            return None
+        return {"filt": self.filt, "block": self.cfg.block_size}
+
+    def spion_kwargs(self, state: SpionState):
+        """`spion=` kwarg for forward() during the sparse phase (else None)."""
+        if state.phase == "sparse" and state.tables is not None:
+            return state.tables
+        return None
+
+    # -- per-epoch update (paper Alg. 2 lines 7-12) ----------------------------
+
+    def observe_epoch(self, state: SpionState, pooled: np.ndarray,
+                      frob_sq: np.ndarray) -> SpionState:
+        """pooled: (Ly, nb, nb) streamed conv+pool capture; frob_sq: (Ly,).
+        Returns the updated state; generates patterns on transition."""
+        if not self.cfg.enabled or state.phase == "sparse":
+            state.epoch += 1
+            return state
+        frob = np.sqrt(np.maximum(np.asarray(frob_sq, np.float64), 0.0))
+        state.frob_hist.append(frob)
+        if len(state.frob_hist) >= 2:
+            # Eq. 2: distance_i = | ||A_{i-1}||_F - ||A_i||_F |, layer-averaged
+            d = float(np.mean(np.abs(state.frob_hist[-2] - state.frob_hist[-1])))
+            state.dist_hist.append(d)
+        transition = False
+        if len(state.dist_hist) >= 2 and state.epoch + 1 >= self.cfg.min_dense_epochs:
+            # Alg. 2 line 10: sqrt((d_{i-1} - d_i)^2) < alpha
+            transition = abs(state.dist_hist[-2] - state.dist_hist[-1]) < self.cfg.transition_tol
+        if state.epoch + 1 >= self.cfg.max_dense_epochs:
+            transition = True
+        if transition:
+            state = self.generate(state, pooled)
+        state.epoch += 1
+        return state
+
+    def generate(self, state: SpionState, pooled: np.ndarray) -> SpionState:
+        """Pattern generation for every layer; builds stacked padded BCSR."""
+        pooled = np.asarray(pooled, np.float64)
+        Ly = pooled.shape[0]
+        masks = [
+            generate_pattern(None, pooled=pooled[l], variant=self.cfg.variant,
+                             block_size=self.cfg.block_size,
+                             alpha_quantile=self.cfg.alpha_quantile,
+                             causal=self.causal)
+            for l in range(Ly)
+        ]
+        K = self.cfg.max_blocks_per_row or max(int(m.sum(axis=1).max()) for m in masks)
+        tabs = [bcsr_from_blockmask(m, self.cfg.block_size, max_k=K) for m in masks]
+        state.tables = {
+            "col_idx": jnp.stack([t.col_idx for t in tabs]),
+            "nvalid": jnp.stack([t.nvalid for t in tabs]),
+            "block": self.cfg.block_size,
+        }
+        state.density = float(np.mean([m.mean() for m in masks]))
+        state.phase = "sparse"
+        return state

@@ -1,0 +1,93 @@
+"""Comparison models from the paper's §5 evaluation:
+
+  - Original dense Transformer: the default (spion disabled).
+  - BigBird / sliding-window:    fixed block patterns fed through the SAME
+                                 BCSR machinery (pattern.bigbird_pattern).
+  - Reformer:                    LSH-bucketed chunk attention (this module).
+  - SPION-C / SPION-F / SPION-CF: SpionConfig.variant.
+
+`fixed_pattern_tables(...)` lets any arch train with a static pattern from
+step 0 — that IS the BigBird/Longformer regime, so the baseline shares every
+kernel/optimizer codepath with SPION (paper-faithful comparison).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pattern import bigbird_pattern, window_pattern
+from repro.core.sparse_attention import bcsr_from_blockmask
+
+
+def fixed_pattern_tables(kind: str, seq_len: int, block: int, num_layers: int,
+                         *, causal: bool = False, seed: int = 0, **kw):
+    """Stacked BCSR tables for a fixed pattern applied to every layer."""
+    n = seq_len // block
+    if kind == "bigbird":
+        mask = bigbird_pattern(n, causal=causal, seed=seed, **kw)
+    elif kind == "window":
+        mask = window_pattern(n, causal=causal, **kw)
+    else:
+        raise ValueError(kind)
+    K = int(mask.sum(axis=1).max())
+    t = bcsr_from_blockmask(mask, block, max_k=K)
+    return {
+        "col_idx": jnp.stack([t.col_idx] * num_layers),
+        "nvalid": jnp.stack([t.nvalid] * num_layers),
+        "block": block,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Reformer-style LSH attention (baseline)
+# ---------------------------------------------------------------------------
+
+def lsh_attention(q, k, v, *, num_hashes: int = 2, bucket_size: int = 32,
+                  key=None, causal: bool = False):
+    """Angular-LSH chunked attention (Reformer, simplified):
+    shared-QK hashing via random rotations; sort by bucket; attend within a
+    chunk and its predecessor; average over hash rounds.
+    q,k,v: (B,S,H,hd) -> (B,S,H,hd).
+    """
+    B, S, H, hd = q.shape
+    key = key if key is not None else jax.random.key(0)
+    n_buckets = max(2, S // bucket_size)
+    n_buckets = n_buckets + (n_buckets % 2)
+    outs = []
+    for r in range(num_hashes):
+        rk = jax.random.fold_in(key, r)
+        R = jax.random.normal(rk, (hd, n_buckets // 2))
+        proj = jnp.einsum("bshd,df->bshf", q, R)  # shared-QK: hash queries
+        buckets = jnp.argmax(jnp.concatenate([proj, -proj], -1), -1)  # (B,S,H)
+        # stable sort by bucket, keep inverse permutation
+        order = jnp.argsort(buckets * S + jnp.arange(S)[None, :, None], axis=1)
+        inv = jnp.argsort(order, axis=1)
+
+        def gather(x, idx):
+            return jnp.take_along_axis(x, idx[..., None], axis=1)
+
+        qs, ks, vs = (gather(x, order) for x in (q, k, v))
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, H))
+        pos_s = jnp.take_along_axis(pos, order, axis=1)
+        nc = S // bucket_size
+        qc = qs.reshape(B, nc, bucket_size, H, hd)
+        # attend to own chunk + previous chunk (Reformer trick)
+        kc = ks.reshape(B, nc, bucket_size, H, hd)
+        vc = vs.reshape(B, nc, bucket_size, H, hd)
+        k2 = jnp.concatenate([jnp.roll(kc, 1, axis=1), kc], axis=2)
+        v2 = jnp.concatenate([jnp.roll(vc, 1, axis=1), vc], axis=2)
+        pc = pos_s.reshape(B, nc, bucket_size, H)
+        p2 = jnp.concatenate([jnp.roll(pc, 1, axis=1), pc], axis=2)
+        s = jnp.einsum("bcqhd,bckhd->bchqk", qc, k2) / np.sqrt(hd)
+        if causal:
+            qpos = pc.transpose(0, 1, 3, 2)   # (B,nc,H,bucket)
+            kpos = p2.transpose(0, 1, 3, 2)   # (B,nc,H,2*bucket)
+            ok = qpos[..., :, None] >= kpos[..., None, :]
+            s = jnp.where(ok, s, -jnp.inf)
+        # exclude self-attention (reformer: token never attends to itself
+        # unless no other target) — keep simple: allow self.
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bchqk,bckhd->bcqhd", p, v2).reshape(B, S, H, hd)
+        outs.append(jnp.take_along_axis(o, inv[..., None], axis=1))
+    return jnp.mean(jnp.stack(outs), axis=0)

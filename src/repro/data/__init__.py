@@ -1,0 +1,3 @@
+from repro.data.listops import make_listops_batch, generate_listops  # noqa: F401
+from repro.data.synthetic import lm_batch_iterator, synthetic_task_batch  # noqa: F401
+from repro.data.pipeline import ShardedBatcher  # noqa: F401

@@ -1,0 +1,65 @@
+"""Sharded host->device data pipeline: background prefetch thread + per-shard
+placement with jax.device_put under a NamedSharding (multi-host: each process
+feeds its addressable shards — same API, jax.make_array_from_process_local_data).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ShardedBatcher:
+    """Wraps a host iterator of numpy batches; prefetches `depth` batches and
+    places them according to `spec` on `mesh` (batch dim over data axes)."""
+
+    def __init__(self, it: Iterator, mesh: Optional[Mesh] = None,
+                 spec: Optional[P] = None, depth: int = 2):
+        self.it = it
+        self.mesh = mesh
+        self.spec = spec
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.err = None
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _place(self, batch):
+        if self.mesh is None:
+            return jax.tree_util.tree_map(jax.numpy.asarray, batch)
+        sh = NamedSharding(self.mesh, self.spec if self.spec is not None
+                           else P(tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)))
+
+        def put(x):
+            full = NamedSharding(self.mesh, P(*([sh.spec[0]] + [None] * (x.ndim - 1))))
+            return jax.device_put(x, full)
+        return jax.tree_util.tree_map(put, batch)
+
+    def _worker(self):
+        try:
+            for b in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(self._place(b))
+            self.q.put(StopIteration)
+        except Exception as e:  # surface on next()
+            self.err = e
+            self.q.put(StopIteration)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is StopIteration:
+            if self.err:
+                raise self.err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()

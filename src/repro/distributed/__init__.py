@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    constrain,
+    mesh_context,
+    param_shardings,
+    spec_for_path,
+)

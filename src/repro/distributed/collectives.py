@@ -1,0 +1,52 @@
+"""Explicit-collective layer (shard_map) for the distributed-optimization
+tricks GSPMD cannot express on its own:
+
+  - compressed_grad_sync: int8-quantised DP all-reduce (4x wire traffic cut;
+    cross-pod links are the scarce resource at 512+ chips).
+  - hierarchical_grad_sync: reduce within pod first, then across pods —
+    matches the pod/ICI vs inter-pod/DCN bandwidth hierarchy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.optim.grad import compressed_psum
+
+
+def _replicated_specs(tree):
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+def compressed_grad_sync(mesh: Mesh, grads, axes=("data",)):
+    """All-reduce `grads` over `axes` with int8 compression. Grads enter
+    sharded-over-axes (per-shard partial sums from per-device loss) and leave
+    fully synchronised. Used by train.py when grad_compression='int8'."""
+    specs = _replicated_specs(grads)
+
+    def f(g):
+        return compressed_psum(g, axes if len(axes) > 1 else axes[0])
+
+    fn = shard_map(f, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                   check_rep=False)
+    return fn(grads)
+
+
+def hierarchical_grad_sync(mesh: Mesh, grads):
+    """psum within 'data' (fast ICI), then across 'pod' (slow inter-pod),
+    with compression only on the slow hop."""
+    specs = _replicated_specs(grads)
+
+    def f(g):
+        g = jax.tree_util.tree_map(lambda x: jax.lax.psum(x, "data"), g)
+        if "pod" in mesh.axis_names:
+            g = compressed_psum(g, "pod")
+        return g
+
+    fn = shard_map(f, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                   check_rep=False)
+    return fn(grads)

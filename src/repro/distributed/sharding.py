@@ -1,0 +1,227 @@
+"""Logical-axis sharding rules -> NamedSharding, plus a mesh context so model
+code can emit sharding constraints without carrying a mesh argument.
+
+Rules follow the Megatron/MaxText convention:
+  - attention qkv/o projections:   shard the heads (output) dim over `model`
+  - mlp in/gate:                   shard d_ff over `model`
+  - mlp out:                       shard d_ff (input) over `model`
+  - embeddings / lm head:          shard vocab over `model`
+  - MoE expert tensors:            shard experts over `model` when E >= |model|,
+                                   else shard d_ff within each expert
+  - everything tiny (norms, bias): replicated
+Stacked scan-over-layers params carry a leading layer dim (always replicated).
+Activations: batch over ('pod','data') where present.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    tok = _MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def data_axes(mesh: Mesh):
+    """All data-parallel-ish axes present in the mesh (pod composes with data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop (or shrink) spec entries whose mesh-axis product does not divide
+    the corresponding dim — jit in/out shardings require exact divisibility."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        if d % _axis_size(mesh, e) == 0:
+            out.append(e)
+            continue
+        if isinstance(e, tuple):
+            kept = None
+            for k in range(len(e) - 1, 0, -1):
+                if d % _axis_size(mesh, e[:k]) == 0:
+                    kept = e[:k]
+                    break
+            out.append(kept)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    `spec` entries: axis-name str, tuple of axis names, or None. The sentinel
+    string "batch" expands to the mesh's data axes. wsc tolerates uneven dims
+    (GSPMD pads), so no divisibility sanitisation here — only jit-boundary
+    shardings need sanitize_spec."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "batch":
+            resolved.append(data_axes(mesh))
+        else:
+            resolved.append(s)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-name driven)
+# ---------------------------------------------------------------------------
+
+# (regex over '/'-joined param path, spec builder given ndim). Specs are for
+# the *unstacked* tensor; a leading scan-layer dim is prepended as None by
+# param_shardings when the leaf has one more dim than the rule expects.
+_RULES = [
+    # attention projections
+    (r"(wq|wk|wv|wqkv)$", lambda nd: P(None, "model")),
+    (r"wo$", lambda nd: P("model", None)),
+    (r"(bq|bk|bv)$", lambda nd: P("model")),
+    # MoE expert weights (experts, d, ff) / (experts, ff, d) — BEFORE the
+    # generic mlp rules (first match wins)
+    (r"experts/(w_in|w_gate)$", lambda nd: P("model", None, None)),
+    (r"experts/w_out$", lambda nd: P("model", None, None)),
+    (r"router/w$", lambda nd: P(None, None)),
+    # gated mlp
+    (r"(w_in|w_gate)$", lambda nd: P(None, "model")),
+    (r"w_out$", lambda nd: P("model", None)),
+    # embeddings and head
+    (r"(tok_embed|lm_head)/w$", lambda nd: P("model", None) if nd == 2 else P("model")),
+    (r"pos_embed/w$", lambda nd: P(None, None)),
+    # ssm (rwkv/mamba) projections: shard inner dim over model
+    (r"(w_r|w_k|w_v|w_g|w_xbc|w_dt|in_proj)$", lambda nd: P(None, "model")),
+    (r"(out_proj)$", lambda nd: P("model", None)),
+    # patch projector (vlm stub)
+    (r"patch_proj/w$", lambda nd: P(None, "model") if nd == 2 else P()),
+]
+
+
+# fallbacks when the primary rule does not divide (e.g. mixtral's 8 experts
+# on a 16-way model axis -> TP-within-expert over d_ff instead)
+_FALLBACKS = [
+    (r"experts/(w_in|w_gate)$", lambda nd: P(None, None, "model")),
+    (r"experts/w_out$", lambda nd: P(None, "model", None)),
+]
+
+
+def _pad(spec: P, ndim: int) -> P:
+    extra = ndim - len(spec)
+    if extra > 0:
+        return P(*([None] * extra), *spec)
+    if extra < 0:  # rule wider than tensor (e.g. tied 1-dim) -> replicate
+        return P()
+    return spec
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            return _pad(fn(ndim), ndim)
+    return P()  # replicated (norm scales, small biases, decay params, ...)
+
+
+def spec_candidates(path: str, ndim: int):
+    """Primary spec followed by divisibility fallbacks."""
+    out = [spec_for_path(path, ndim)]
+    for pat, fn in _FALLBACKS:
+        if re.search(pat, path):
+            out.append(_pad(fn(ndim), ndim))
+    return out
+
+
+def best_spec(mesh, path: str, leaf) -> P:
+    """First candidate whose sanitised form still carries a sharding."""
+    cands = spec_candidates(path, getattr(leaf, "ndim", 0))
+    best = sanitize_spec(mesh, cands[0], leaf.shape)
+    for c in cands:
+        s = sanitize_spec(mesh, c, leaf.shape)
+        if any(e is not None for e in s):
+            return s
+    return best
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params, mesh: Optional[Mesh] = None) -> dict:
+    """PartitionSpec pytree matching `params`. With `mesh`, specs are
+    sanitised against leaf shapes (jit-divisibility)."""
+    def one(path, leaf):
+        if mesh is not None:
+            return best_spec(mesh, _path_str(path), leaf)
+        return spec_for_path(_path_str(path), getattr(leaf, "ndim", 0))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(mesh: Mesh, params) -> dict:
+    """NamedSharding pytree for `params` (params may be ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_pspecs(params, mesh)
+    )
+
+
+def zero1_pspecs(params, mesh: Mesh) -> dict:
+    """ZeRO-1 optimizer-state specs: param spec + shard the largest
+    still-unsharded dim over the data axes (falls back to the param spec)."""
+    daxes = data_axes(mesh)
+
+    def one(path, leaf):
+        spec = best_spec(mesh, _path_str(path), leaf)
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # largest unsharded dim that the data axes divide exactly
+        cand, size = None, 0
+        for i, (e, d) in enumerate(zip(entries, leaf.shape)):
+            if e is None and d > size and daxes and d % _axis_size(mesh, daxes) == 0:
+                cand, size = i, d
+        if cand is not None:
+            entries[cand] = daxes if len(daxes) > 1 else daxes[0]
+        return sanitize_spec(mesh, P(*entries), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)

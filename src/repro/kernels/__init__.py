@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the SPION sparse-MHA hot spots.
+
+sddmm / sparse_softmax / spmm: the paper-faithful 3-kernel pipeline
+(cusparseSDDMM / warp softmax / cusparseSpMM adapted to BCSR + MXU tiles).
+block_sparse_attn: beyond-paper fused flash-style kernel.
+ops: jit'd public wrappers; ref: pure-jnp oracles.
+"""
+from repro.kernels.ops import spion_attention_kernel  # noqa: F401

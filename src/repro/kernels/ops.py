@@ -1,0 +1,72 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`spion_attention_kernel(...)` is a drop-in for core.sparse_attention.
+bcsr_attention with use_pallas semantics: handles GQA head grouping, BCSR
+table clamping, and dispatches either the paper-faithful 3-kernel pipeline
+or the fused flash-style kernel.
+
+interpret=True executes the kernel bodies in Python on CPU (CI); on a real
+TPU runtime pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_sparse_attn import fused_block_sparse_attention
+from repro.kernels.sddmm import sddmm
+from repro.kernels.sparse_softmax import sparse_softmax
+from repro.kernels.spmm import spmm
+
+
+def _prep_tables(bcsr):
+    col = jnp.maximum(bcsr.col_idx, 0).astype(jnp.int32)
+    nvalid = bcsr.nvalid.astype(jnp.int32)
+    return col, nvalid
+
+
+def _split_heads(q, k, v):
+    """(B,S,H,hd)x(B,S,KV,hd) -> q (B*KV, G, S, hd), k/v (B*KV, S, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4).reshape(B * KV, G, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    return qh, kh, vh, (B, S, H, hd, KV, G)
+
+
+def _merge_heads(o, dims):
+    B, S, H, hd, KV, G = dims
+    return o.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block", "fused", "interpret"))
+def _dispatch(q, k, v, col, nvalid, *, cfg, block, fused, interpret):
+    causal = cfg.causal
+    sw = cfg.sliding_window
+    qh, kh, vh, dims = _split_heads(q, k, v)
+    if fused:
+        o = fused_block_sparse_attention(qh, kh, vh, col, nvalid, block=block,
+                                         causal=causal, sliding_window=sw,
+                                         interpret=interpret)
+        return _merge_heads(o, dims)
+    B, S, H, hd, KV, G = dims
+    qf = qh.reshape(B * KV * G, S, hd)
+    kf = jnp.repeat(kh, G, axis=0) if G > 1 else kh
+    vf = jnp.repeat(vh, G, axis=0) if G > 1 else vh
+    s = sddmm(qf, kf, col, nvalid, block=block, causal=causal,
+              sliding_window=sw, interpret=interpret)
+    p = sparse_softmax(s, col, nvalid, block=block, seq_len=S, causal=causal,
+                       sliding_window=sw, interpret=interpret)
+    o = spmm(p, vf, col, nvalid, block=block, interpret=interpret)
+    return _merge_heads(o.reshape(B * KV, G, S, hd), dims)
+
+
+def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=True):
+    """Pallas-kernel counterpart of core.sparse_attention.bcsr_attention."""
+    col, nvalid = _prep_tables(bcsr)
+    return _dispatch(q, k, v, col, nvalid, cfg=cfg, block=bcsr.block,
+                     fused=fused, interpret=interpret)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The oracle semantics are the paper's (Alg. 5/6): SDDMM computes only the
+P-active blocks; the sparse softmax counts pruned positions as exp(0 - max)
+in the denominator (Alg. 6 line 15); SpMM multiplies active blocks by V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _block_positions(col_idx, block, nrb):
+    """(qpos, kpos, valid): per (r, p, c, q) absolute positions + validity."""
+    K = col_idx.shape[1]
+    qpos = (jnp.arange(nrb) * block)[:, None, None, None] + jnp.arange(block)[None, :, None, None]
+    colc = jnp.maximum(col_idx, 0)
+    kpos = (colc * block)[:, None, :, None] + jnp.arange(block)[None, None, None, :]
+    valid = (col_idx >= 0)[:, None, :, None]
+    return qpos, kpos, valid
+
+
+def _mask(col_idx, block, nrb, causal, sliding_window):
+    qpos, kpos, valid = _block_positions(col_idx, block, nrb)
+    ok = valid
+    if causal:
+        ok = ok & (qpos >= kpos)
+    if sliding_window:
+        ok = ok & (qpos - kpos < sliding_window)
+    return jnp.broadcast_to(ok, (nrb, block, col_idx.shape[1], block))
+
+
+def sddmm_ref(q, k, col_idx, *, block, causal=False, sliding_window=None):
+    """q (N, S, hd); k (N, S, hd); col_idx (nrb, K) ->
+    s_blocks (N, nrb, K, block, block) fp32 = (Q K^T / sqrt(hd)) on active
+    blocks, -inf on masked positions."""
+    N, S, hd = q.shape
+    nrb = S // block
+    K = col_idx.shape[1]
+    qb = q.reshape(N, nrb, block, hd)
+    kb = k.reshape(N, S // block, block, hd)
+    kg = kb[:, jnp.maximum(col_idx, 0)]                      # (N, nrb, K, blk, hd)
+    # s axes: n, r(row-block), p(q row), c(active block), q(k col)
+    s = jnp.einsum("nrph,nrcqh->nrpcq", qb, kg).astype(jnp.float32) / np.sqrt(hd)
+    ok = _mask(col_idx, block, nrb, causal, sliding_window)   # (r, p, c, q)
+    s = jnp.where(ok[None], s, -jnp.inf)
+    return jnp.moveaxis(s, 2, 3)  # (N, nrb, K, blk_q, blk_k)
+
+
+def row_total_ref(S, block, causal, sliding_window):
+    """Total positions each row would attend to densely (for the correction)."""
+    if causal:
+        rt = jnp.arange(S) + 1
+        if sliding_window:
+            rt = jnp.minimum(rt, sliding_window)
+        return rt
+    return jnp.full((S,), S)
+
+
+def sparse_softmax_ref(s_blocks, col_idx, *, block, seq_len, causal=False,
+                       sliding_window=None):
+    """s_blocks (N, nrb, K, blk, blk) fp32 with -inf at masked positions ->
+    probs, same shape, with the Alg. 6 zero-correction."""
+    N, nrb, K, b, _ = s_blocks.shape
+    flat = jnp.moveaxis(s_blocks, 2, 3).reshape(N, nrb, b, K * b)  # rows together
+    mx = jnp.maximum(jnp.max(flat, -1, keepdims=True), -1e30)
+    ex = jnp.where(jnp.isneginf(flat), 0.0, jnp.exp(flat - mx))
+    denom = ex.sum(-1, keepdims=True)
+    stored = jnp.sum(~jnp.isneginf(flat), -1, keepdims=True)
+    rt = row_total_ref(seq_len, block, causal, sliding_window).reshape(nrb, b)[None, :, :, None]
+    denom = denom + jnp.maximum(rt - stored, 0) * jnp.exp(-mx)
+    p = ex / denom
+    return jnp.moveaxis(p.reshape(N, nrb, b, K, b), 3, 2)
+
+
+def spmm_ref(p_blocks, v, col_idx):
+    """p_blocks (N, nrb, K, blk, blk); v (N, S, hd) -> out (N, S, hd)."""
+    N, nrb, K, b, _ = p_blocks.shape
+    S, hd = v.shape[1], v.shape[2]
+    vb = v.reshape(N, S // b, b, hd)
+    vg = vb[:, jnp.maximum(col_idx, 0)]                      # (N, nrb, K, blk, hd)
+    out = jnp.einsum("nrcpq,nrcqh->nrph", p_blocks.astype(v.dtype), vg)
+    return out.reshape(N, S, hd)
+
+
+def fused_ref(q, k, v, col_idx, *, block, causal=False, sliding_window=None):
+    """Fused oracle = sddmm -> sparse softmax -> spmm."""
+    s = sddmm_ref(q, k, col_idx, block=block, causal=causal, sliding_window=sliding_window)
+    p = sparse_softmax_ref(s, col_idx, block=block, seq_len=q.shape[1],
+                           causal=causal, sliding_window=sliding_window)
+    return spmm_ref(p, v, col_idx).astype(q.dtype)

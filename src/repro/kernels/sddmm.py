@@ -1,0 +1,67 @@
+"""Pallas TPU SDDMM: S^r = (P>0) ⊙ (Q K^T / sqrt(hd)) on active BCSR blocks.
+
+TPU adaptation of cusparseSDDMM (paper Alg. 5 line 5): instead of element-CSR,
+each grid step computes one (block x block) MXU tile Q_r @ K_c^T where
+c = col_idx[r, k]. The column-block table rides in SMEM via scalar prefetch;
+BlockSpec index maps gather K tiles straight from HBM -> VMEM.
+
+Grid: (N, nrb, K)   N = batch*heads (kv-broadcast handled in ops.py)
+Blocks: q (1, B, hd) VMEM; k (1, B, hd) VMEM gathered by col table;
+        out (1, 1, 1, B, B) VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(col_ref, nvalid_ref, q_ref, k_ref, o_ref, *, block, scale,
+            causal, sliding_window):
+    r = pl.program_id(1)
+    c = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)          # (B, hd)
+    k = k_ref[0].astype(jnp.float32)          # (B, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    col = col_ref[r, c]
+    qpos = r * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    kpos = col * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    ok = jnp.full((block, block), c < nvalid_ref[r])
+    if causal:
+        ok &= qpos >= kpos
+    if sliding_window is not None:
+        ok &= (qpos - kpos) < sliding_window
+    o_ref[0, 0, 0] = jnp.where(ok, s, -jnp.inf)
+
+
+def sddmm(q, k, col_idx, nvalid, *, block, causal=False, sliding_window=None,
+          interpret=True):
+    """q, k: (N, S, hd); col_idx (nrb, K) int32 (clamped >= 0);
+    nvalid (nrb,) int32. Returns s_blocks (N, nrb, K, block, block) fp32."""
+    N, S, hd = q.shape
+    nrb, K = col_idx.shape
+    scale = 1.0 / np.sqrt(hd)
+
+    kern = functools.partial(_kernel, block=block, scale=scale,
+                             causal=causal, sliding_window=sliding_window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, nrb, K),
+        in_specs=[
+            pl.BlockSpec((1, block, hd), lambda n, r, c, col, nv: (n, r, 0)),
+            pl.BlockSpec((1, block, hd), lambda n, r, c, col, nv: (n, col[r, c], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block, block),
+                               lambda n, r, c, col, nv: (n, r, c, 0, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, nrb, K, block, block), jnp.float32),
+        interpret=interpret,
+    )(col_idx, nvalid, q, k)

@@ -1,0 +1,62 @@
+"""Pallas TPU sparse softmax over BCSR block-rows (paper Alg. 6 on TPU).
+
+GPU version: one warp per row, warp-shuffle reductions. TPU version: one grid
+step per (N, row-block); the K active (B x B) tiles of that block-row sit in
+VMEM at once and the row reduction is a vectorised max/sum over the (K*B)
+lane axis — the VMEM-tile analogue of the warp reduction.
+
+Faithful correction (Alg. 6 line 15): pruned positions contribute
+exp(0 - max) each; row_total is L (encoder) or min(i+1, window) (causal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(col_ref, nvalid_ref, s_ref, o_ref, *, block, K, seq_len,
+            causal, sliding_window):
+    r = pl.program_id(1)
+    s = s_ref[0, 0]                              # (K, B, B) fp32
+    flat = jnp.moveaxis(s, 0, 1).reshape(block, K * block)
+    neg = jnp.isneginf(flat)
+    mx = jnp.maximum(jnp.max(flat, -1, keepdims=True), -1e30)
+    ex = jnp.where(neg, 0.0, jnp.exp(flat - mx))
+    denom = jnp.sum(ex, -1, keepdims=True)
+    stored = jnp.sum((~neg).astype(jnp.float32), -1, keepdims=True)
+    rows = r * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+    if causal:
+        rt = (rows + 1).astype(jnp.float32)
+        if sliding_window is not None:
+            rt = jnp.minimum(rt, float(sliding_window))
+    else:
+        rt = jnp.full((block, 1), float(seq_len))
+    denom = denom + jnp.maximum(rt - stored, 0.0) * jnp.exp(-mx)
+    p = ex / denom
+    o_ref[0, 0] = jnp.moveaxis(p.reshape(block, K, block), 1, 0)
+
+
+def sparse_softmax(s_blocks, col_idx, nvalid, *, block, seq_len, causal=False,
+                   sliding_window=None, interpret=True):
+    """s_blocks (N, nrb, K, B, B) fp32 (-inf masked) -> probs, same shape."""
+    N, nrb, K = s_blocks.shape[:3]
+    kern = functools.partial(_kernel, block=block, K=K, seq_len=seq_len,
+                             causal=causal, sliding_window=sliding_window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, nrb),
+        in_specs=[pl.BlockSpec((1, 1, K, block, block),
+                               lambda n, r, col, nv: (n, r, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, K, block, block),
+                               lambda n, r, col, nv: (n, r, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(s_blocks.shape, jnp.float32),
+        interpret=interpret,
+    )(col_idx, nvalid, s_blocks)

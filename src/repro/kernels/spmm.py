@@ -1,0 +1,55 @@
+"""Pallas TPU block SpMM: out = S^s @ V over active BCSR blocks
+(cusparseSpMM analogue, paper Alg. 5 line 7).
+
+Grid (N, nrb, K): K is the innermost (sequential) dimension, so the output
+tile for row-block r stays resident in VMEM while the K active probability
+tiles stream through and accumulate on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(col_ref, nvalid_ref, p_ref, v_ref, o_ref, *, block):
+    r = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(c < nvalid_ref[r])
+    def _acc():
+        p = p_ref[0, 0, 0]                     # (B, B) fp32
+        v = v_ref[0].astype(jnp.float32)       # (B, hd)
+        o_ref[0] += jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+
+def spmm(p_blocks, v, col_idx, nvalid, *, block, interpret=True):
+    """p_blocks (N, nrb, K, B, B); v (N, S, hd) -> (N, S, hd) in v.dtype."""
+    N, nrb, K = p_blocks.shape[:3]
+    S, hd = v.shape[1], v.shape[2]
+    kern = functools.partial(_kernel, block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, nrb, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block, block),
+                         lambda n, r, c, col, nv: (n, r, c, 0, 0)),
+            pl.BlockSpec((1, block, hd), lambda n, r, c, col, nv: (n, col[r, c], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, hd), lambda n, r, c, col, nv: (n, r, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, S, hd), v.dtype),
+        interpret=interpret,
+    )(col_idx, nvalid, p_blocks, v)

@@ -1,0 +1,379 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with the
+# production shardings and extract memory / FLOPs / collective-bytes evidence.
+# The two lines above MUST precede any jax import (device count locks on init).
+#
+# Cost accounting: XLA's cost_analysis counts a while-loop body ONCE, so a
+# rolled scan-over-layers under-reports FLOPs by ~L. We therefore compile each
+# cell twice more with k1/k2 fully-unrolled layers and extrapolate linearly
+# (layers are homogeneous; hybrid gets a period-aware plan). The full rolled
+# config is still lowered+compiled as the pass/fail + memory_analysis proof.
+# cost_analysis numbers are PER-DEVICE (the partitioned module is the
+# per-device program); roofline terms divide by per-chip peaks accordingly.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, all_configs, get_config  # noqa: E402
+from repro.distributed.sharding import (mesh_context, param_pspecs,  # noqa: E402
+                                         sanitize_spec, zero1_pspecs)
+from repro.launch import hlo  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.launch.steps import (batch_pspecs, cache_pspecs, make_prefill_step,  # noqa: E402
+                                make_serve_step, make_train_step,
+                                spion_dryrun_tables)
+from repro.models.registry import build, cache_specs, input_specs  # noqa: E402
+
+FSDP_PARAM_THRESHOLD = 8e9  # params above this are data-sharded too (FSDP)
+FULL_UNROLL = 10**6
+
+
+def _f32_masters(tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_specs(params_tree):
+    return {
+        "mu": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_tree),
+        "nu": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_tree),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _spion_layers(cfg):
+    """Number of per-layer patterns the tables need for this cfg."""
+    if cfg.family == "hybrid":
+        return max(cfg.num_layers // cfg.hybrid_attn_every, 1)
+    return cfg.num_layers
+
+
+def build_cell(cfg, shape, mesh, mode, n_micro=1):
+    """Returns (jitted_fn, example_args(ShapeDtypeStructs)) for one cell."""
+    bundle = build(cfg)
+    params_bf = jax.eval_shape(lambda: bundle.init(jax.random.key(0)))
+    fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+    psp = zero1_pspecs(params_bf, mesh) if fsdp else param_pspecs(params_bf, mesh)
+    psp_ns = _ns(mesh, psp)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind in ("train", "prefill"):
+        specs = input_specs(cfg, shape)["batch"]
+        bsp_ns = _ns(mesh, batch_pspecs(cfg, specs, mesh))
+        tables = None
+        if mode == "sparse":
+            # attention runs over the FULL concatenated sequence (vlm: patch
+            # tokens are prepended, so patch+text == shape.seq_len)
+            tables = spion_dryrun_tables(cfg, shape.seq_len, _spion_layers(cfg))
+        if shape.kind == "train":
+            params = _f32_masters(params_bf)
+            opt = _opt_specs(params)
+            osp = {"mu": zero1_pspecs(params, mesh), "nu": zero1_pspecs(params, mesh),
+                   "count": P()}
+            osp_ns = _ns(mesh, osp)
+            step_fn = make_train_step(cfg, spion=(mode == "sparse"), n_micro=n_micro)
+            args = [params, opt, specs, jax.ShapeDtypeStruct((), jnp.int32)]
+            in_sh = [psp_ns, osp_ns, bsp_ns, rep]
+            out_sh = (psp_ns, osp_ns, {"loss": rep, "gnorm": rep, "lr": rep})
+            if mode == "sparse":
+                blk = tables["block"]
+
+                def fn(p, o, b, s, col, nv):
+                    return step_fn(p, o, b, s,
+                                   {"col_idx": col, "nvalid": nv, "block": blk})
+                args += [jax.ShapeDtypeStruct(tables["col_idx"].shape, jnp.int32),
+                         jax.ShapeDtypeStruct(tables["nvalid"].shape, jnp.int32)]
+                in_sh += [rep, rep]
+                jf = jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh,
+                             donate_argnums=(0, 1))
+            else:
+                jf = jax.jit(step_fn, in_shardings=tuple(in_sh), out_shardings=out_sh,
+                             donate_argnums=(0, 1))
+            return jf, args
+        # prefill
+        step_fn = make_prefill_step(cfg, spion=(mode == "sparse"))
+        S_out = shape.seq_len
+        logits_sh = NamedSharding(mesh, sanitize_spec(
+            mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+                    None, "model"),
+            (shape.global_batch, S_out, cfg.vocab_size)))
+        args = [params_bf, specs]
+        in_sh = [psp_ns, bsp_ns]
+        if mode == "sparse":
+            blk = tables["block"]
+
+            def fn(p, b, col, nv):
+                return step_fn(p, b, {"col_idx": col, "nvalid": nv, "block": blk})
+            args += [jax.ShapeDtypeStruct(tables["col_idx"].shape, jnp.int32),
+                     jax.ShapeDtypeStruct(tables["nvalid"].shape, jnp.int32)]
+            in_sh += [rep, rep]
+            jf = jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=logits_sh)
+        else:
+            jf = jax.jit(step_fn, in_shardings=tuple(in_sh), out_shardings=logits_sh)
+        return jf, args
+
+    # decode (serve_step): one token against a seq_len cache
+    spec = input_specs(cfg, shape)
+    cache, tokens, pos = spec["cache"], spec["tokens"], spec["pos"]
+    csp_ns = _ns(mesh, cache_pspecs(cfg, cache, mesh, shape.global_batch))
+    tok_ns = _ns(mesh, batch_pspecs(cfg, tokens, mesh)) if shape.global_batch > 1 \
+        else rep
+    serve = make_serve_step(cfg)
+    logits_sh = NamedSharding(mesh, sanitize_spec(
+        mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+                if shape.global_batch > 1 else None, "model"),
+        (shape.global_batch, cfg.vocab_size)))
+    jf = jax.jit(serve, in_shardings=(psp_ns, csp_ns, tok_ns, rep),
+                 out_shardings=(logits_sh, csp_ns), donate_argnums=(1,))
+    return jf, [params_bf, cache, tokens, pos]
+
+
+# ---------------------------------------------------------------------------
+# cost extraction
+# ---------------------------------------------------------------------------
+
+def compile_cell(cfg, shape, mesh, mode, n_micro=1):
+    jf, args = build_cell(cfg, shape, mesh, mode, n_micro=n_micro)
+    lowered = jf.lower(*args)
+    return lowered.compile()
+
+
+def choose_n_micro(cfg, shape, mesh):
+    """Pick the gradient-accumulation factor that brings estimated activation
+    residency under ~8 GiB/device (measured ~2.2 x L x B_loc x S x d x 2B)."""
+    if shape.kind != "train":
+        return 1
+    daxes = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                         if a in mesh.axis_names]))
+    B = shape.global_batch
+    max_n = max(B // daxes, 1)
+    b_loc = max(B / daxes, 1)
+    act = 2.2 * cfg.num_layers * b_loc * shape.seq_len * cfg.d_model * 2
+    n = 1
+    while n < max_n and act / n > 8e9:
+        n *= 2
+    return n
+
+
+def cost_of(compiled):
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = hlo.collective_stats(text)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "coll_by_kind": coll["by_kind"],
+        "census": hlo.op_census(text),
+    }
+
+
+def _lincomb(costs, coeffs, clamp=False):
+    """Linear combination of cost dicts (flops/hbm/coll scalar; dicts by key).
+    clamp=True only for FINAL results — clamping intermediate marginals (which
+    legitimately go negative from fusion-boundary noise) silently zeroes them
+    and corrupts the extrapolation (bug: hid the zamba2 sparse savings)."""
+    out = {"flops": 0.0, "hbm_bytes": 0.0, "coll_bytes": 0.0,
+           "coll_by_kind": {}, "census": {}}
+    for c, w in zip(costs, coeffs):
+        out["flops"] += w * c["flops"]
+        out["hbm_bytes"] += w * c["hbm_bytes"]
+        out["coll_bytes"] += w * c["coll_bytes"]
+        for k, v in c["coll_by_kind"].items():
+            out["coll_by_kind"][k] = out["coll_by_kind"].get(k, 0.0) + w * v
+        for k, v in c["census"].items():
+            out["census"][k] = out["census"].get(k, 0.0) + w * v
+    if clamp:
+        for k in ("flops", "hbm_bytes", "coll_bytes"):
+            out[k] = max(out[k], 0.0)
+        out["coll_by_kind"] = {k: max(v, 0.0) for k, v in out["coll_by_kind"].items()}
+    return out
+
+
+def _reduced(cfg, k):
+    kw = dict(num_layers=k, scan_unroll=FULL_UNROLL)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = k
+    return cfg.replace(**kw)
+
+
+def extrapolated_cost(cfg, shape, mesh, mode):
+    """Per-device cost for the full config via layer extrapolation."""
+    L = cfg.num_layers
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        napps = L // e
+        c1 = cost_of(compile_cell(_reduced(cfg, 1), shape, mesh, "dense"))
+        c2 = cost_of(compile_cell(_reduced(cfg, 2), shape, mesh, "dense"))
+        mm = _lincomb([c2, c1], [1, -1])                      # 1 mamba layer
+        c_em1 = cost_of(compile_cell(_reduced(cfg, e - 1), shape, mesh, "dense"))
+        c_e = cost_of(compile_cell(_reduced(cfg, e), shape, mesh, mode))
+        attn = _lincomb([c_e, c_em1, mm], [1, -1, -1])        # 1 shared-attn app
+        return _lincomb([c1, mm, attn], [1, L - 1, napps], clamp=True), {
+            "plan": "hybrid", "ks": [1, 2, e - 1, e]}
+    k1, k2 = (1, 2)
+    c1 = cost_of(compile_cell(_reduced(cfg, k1), shape, mesh, mode))
+    c2 = cost_of(compile_cell(_reduced(cfg, k2), shape, mesh, mode))
+    marg = _lincomb([c2, c1], [1, -1])
+    if cfg.encoder_layers:
+        # enc+dec scale together: L pairs
+        return _lincomb([c1, marg], [1, L - k1], clamp=True), {"plan": "encdec",
+                                                                "ks": [k1, k2]}
+    return _lincomb([c1, marg], [1, (L - k1)], clamp=True), {"plan": "uniform",
+                                                             "ks": [k1, k2]}
+
+
+def analyse_memory(compiled, chips):
+    try:
+        mem = compiled.memory_analysis()
+        memd = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        memd["total_bytes"] = (memd["argument_bytes"] + memd["output_bytes"]
+                               + memd["temp_bytes"] - memd["alias_bytes"])
+        # the partitioned module's buffers are per-device already
+        memd["per_device_gb"] = memd["total_bytes"] / chips / 2**30
+        return memd
+    except Exception:
+        return {}
+
+
+def run_cell(arch, shape_name, multi_pod, mode, outdir, verbose=True,
+             cfg_override=None, skip_costs=False, mesh_override=None):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = cfg.skip_reason(shape_name)
+    cellname = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{mode}"
+    path = os.path.join(outdir, cellname + ".json")
+    if reason:
+        rec = {"cell": cellname, "status": "skipped", "reason": reason}
+        json.dump(rec, open(path, "w"), indent=1)
+        if verbose:
+            print(f"[skip] {cellname}: {reason}", flush=True)
+        return rec
+    if mode == "sparse" and (not cfg.spion.enabled or shape.kind == "decode"):
+        rec = {"cell": cellname, "status": "skipped",
+               "reason": "SPION inapplicable (attention-free arch or decode shape)"}
+        json.dump(rec, open(path, "w"), indent=1)
+        if verbose:
+            print(f"[skip] {cellname}: sparse inapplicable", flush=True)
+        return rec
+    mesh = mesh_override if mesh_override is not None else \
+        make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        with mesh_context(mesh):
+            # 1) full config, rolled scans: the compile-proof + memory analysis
+            n_micro = choose_n_micro(cfg, shape, mesh)
+            compiled_full = compile_cell(cfg.replace(scan_unroll=1), shape, mesh,
+                                         mode, n_micro=n_micro)
+            t_full = time.time() - t0
+            memd = analyse_memory(compiled_full, 1)  # module is per-device
+            rec = {"cell": cellname, "status": "ok", "arch": arch,
+                   "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+                   "mode": mode, "chips": chips, "n_micro": n_micro,
+                   "t_compile_full_s": round(t_full, 1),
+                   "params": cfg.param_count(),
+                   "active_params": cfg.active_param_count(),
+                   "memory": memd}
+            # 2) layer-extrapolated per-device costs (single-pod roofline)
+            if not skip_costs:
+                cost, plan = extrapolated_cost(cfg, shape, mesh, mode)
+                terms = hlo.roofline_terms(
+                    cost["flops"], cost["hbm_bytes"], cost["coll_bytes"], 1,
+                    peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+                    link_bw=ICI_BW_PER_LINK)
+                dom = max(terms, key=terms.get)
+                tokens = shape.global_batch * shape.seq_len
+                nd = 6 * cfg.active_param_count() * tokens
+                model_flops_per_dev = (nd if shape.kind == "train"
+                                       else nd / 3.0) / chips
+                if shape.kind == "decode":
+                    model_flops_per_dev = 2 * cfg.active_param_count() * \
+                        shape.global_batch / chips
+                rec.update({
+                    "per_device": cost, "extrapolation": plan,
+                    "roofline": terms, "dominant": dom,
+                    "model_flops_per_device": model_flops_per_dev,
+                    "useful_fraction": (model_flops_per_dev / cost["flops"])
+                    if cost["flops"] else None,
+                })
+            rec["t_total_s"] = round(time.time() - t0, 1)
+            if verbose:
+                mem = rec["memory"].get("per_device_gb", float("nan"))
+                extra = ""
+                if not skip_costs:
+                    extra = (f" flops/dev={rec['per_device']['flops']:.3e}"
+                             f" coll/dev={rec['per_device']['coll_bytes']:.3e}B"
+                             f" dominant={rec['dominant']}"
+                             f" useful={rec['useful_fraction']:.2f}"
+                             if rec.get("useful_fraction") else "")
+                print(f"[ok] {cellname}: mem/dev={mem:.2f}GiB{extra} "
+                      f"({rec['t_total_s']}s)", flush=True)
+    except Exception as e:  # noqa: BLE001
+        rec = {"cell": cellname, "status": "error", "error": str(e)[-2000:],
+               "traceback": traceback.format_exc()[-4000:]}
+        if verbose:
+            print(f"[ERR] {cellname}: {str(e)[:300]}", flush=True)
+    json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--mode", choices=["dense", "sparse", "both"], default="dense")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-costs", action="store_true",
+                    help="compile-proof + memory only (multi-pod cells)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = args.arch.split(",") if args.arch else \
+        sorted(a for a in all_configs() if a != "spion-lra")
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    modes = {"dense": ["dense"], "sparse": ["sparse"], "both": ["dense", "sparse"]}[args.mode]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                for mode in modes:
+                    results.append(run_cell(arch, shape, mp, mode, args.out,
+                                            skip_costs=args.skip_costs or mp))
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {ok} ok / {sk} skipped / {err} errors ==")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, roofline terms.
+
+collective_bytes sums the *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute in the partitioned module
+(cost_analysis does not report collectives). A symbol table of instruction
+result shapes resolves operand names; tuples are expanded.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every 'dtype[d0,d1]' occurrence in type_str
+    (handles tuple types '(f32[2,3], bf16[4])')."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {'total_bytes', 'by_kind': {kind: bytes}, 'count': {kind: n}}.
+
+    Uses each collective's operand sizes where resolvable (symbol table),
+    else the result size. `-start` variants are folded into their base kind
+    ('-done' ops are skipped to avoid double counting).
+    """
+    shapes: dict = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    by_kind: dict = defaultdict(int)
+    count: dict = defaultdict(int)
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, result_type, op = m.group(1), m.group(2), m.group(3)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue
+        # operand list: text inside the outermost parens after the op name
+        try:
+            args_str = ln.split(op + "(", 1)[1]
+            depth, end = 1, 0
+            for i, ch in enumerate(args_str):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_names = [a.strip().lstrip("%") for a in args_str[:end].split(",")]
+            operand_names = [a.split(" ")[-1].lstrip("%") for a in operand_names if a]
+            b = 0
+            for on in operand_names:
+                if on in shapes:
+                    b += _shape_bytes(shapes[on])
+            if b == 0:
+                b = _shape_bytes(result_type)
+        except Exception:
+            b = _shape_bytes(result_type)
+        by_kind[base] += b
+        count[base] += 1
+    return {
+        "total_bytes": int(sum(by_kind.values())),
+        "by_kind": {k: int(v) for k, v in by_kind.items()},
+        "count": {k: int(v) for k, v in count.items()},
+    }
+
+
+def op_census(hlo_text: str, ops=("fusion", "all-reduce", "all-gather",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute", "convolution", "dot",
+                                  "custom-call", "while", "transpose",
+                                  "reshape", "copy")) -> dict:
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"=\s*(?:\(?[^=]*?\)?)\s*{re.escape(op)}\(", hlo_text))
+    return out
+
+
+def roofline_terms(flops, hbm_bytes, coll_bytes, chips, *, peak_flops, hbm_bw,
+                   link_bw):
+    """The three §Roofline terms, in seconds (whole-mesh workload)."""
+    return {
+        "t_compute": flops / (chips * peak_flops),
+        "t_memory": hbm_bytes / (chips * hbm_bw),
+        "t_collective": coll_bytes / (chips * link_bw),
+    }

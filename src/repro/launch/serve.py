@@ -1,0 +1,93 @@
+"""Batched serving driver: synchronous continuous batching over a KV cache.
+
+Requests queue up; each engine tick either prefills a waiting request into a
+free cache slot or decodes one token for every active slot. The decode step
+is the same serve_step the dry-run lowers for decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import build
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (P,) int32
+    max_new: int = 16
+    out: Optional[list] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    """Slot-based batched decode; prefill via repeated decode_step (prefill
+    jit) for simplicity — a production engine would use the fused prefill."""
+
+    def __init__(self, cfg, params, *, slots=4, max_len=512):
+        self.cfg = cfg
+        self.bundle = build(cfg)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = self.bundle.init_cache(slots, max_len)
+        self.pos = np.zeros((slots,), np.int64) - 1  # -1 = free
+        self.active: List[Optional[Request]] = [None] * slots
+        self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        for s in range(self.slots):
+            if self.active[s] is None:
+                self.active[s] = req
+                req.out = []
+                self.pos[s] = 0
+                return s
+        raise RuntimeError("no free slot")
+
+    def _step_token(self, tokens, pos):
+        """tokens (slots,1); single shared pos per tick (synchronous)."""
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens), jnp.int32(pos))
+        return np.asarray(jnp.argmax(logits, -1))
+
+    def run(self, requests: List[Request], greedy=True):
+        """Synchronous batch: all requests padded to the same prompt cadence."""
+        for r in requests:
+            self.submit(r)
+        maxp = max(len(r.prompt) for r in requests)
+        # prefill (token-by-token teacher forcing into the caches)
+        tok = np.zeros((self.slots, 1), np.int32)
+        nxt = np.zeros((self.slots,), np.int32)
+        for t in range(maxp):
+            for s, r in enumerate(self.active):
+                if r is not None:
+                    tok[s, 0] = r.prompt[min(t, len(r.prompt) - 1)]
+            nxt = self._step_token(tok, t)
+        for r in requests:
+            r.t_first = time.time()
+        # decode
+        for j in range(max(r.max_new for r in requests)):
+            for s, r in enumerate(self.active):
+                if r is not None and not r.done:
+                    tok[s, 0] = nxt[s]
+                    r.out.append(int(nxt[s]))
+                    if len(r.out) >= r.max_new:
+                        r.done = True
+                        r.t_done = time.time()
+            if all(r is None or r.done for r in self.active):
+                break
+            nxt = self._step_token(tok, maxp + j)
+        for s in range(self.slots):
+            self.active[s] = None
+            self.pos[s] = -1
+        return requests

@@ -1,0 +1,209 @@
+"""Step builders shared by dryrun / train / serve: jitted train_step,
+prefill_step and serve_step with full in/out shardings for a target mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (data_axes, param_pspecs, sanitize_spec,
+                                         zero1_pspecs)
+from repro.models.registry import build, cache_specs, input_specs
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def batch_pspecs(cfg: ModelConfig, batch, mesh: Mesh):
+    """Shard batch leading (batch) dim over the data axes."""
+    daxes = data_axes(mesh)
+
+    def one(x):
+        if x.ndim == 0:
+            return P()
+        return sanitize_spec(mesh, P(daxes, *([None] * (x.ndim - 1))), x.shape)
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_pspecs(cfg: ModelConfig, cache, mesh: Mesh, batch_size: int):
+    """KV caches: (L, B, S, KV, hd) — shard B over data when it covers the
+    axis, else shard S (sequence parallelism for long_500k batch=1).
+    SSM states (L, B, H, ...): shard H over model; B over data when possible."""
+    daxes = data_axes(mesh)
+    ndata = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    batch_big = batch_size >= ndata
+
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "ck", "cv"):           # (L,B,S,KV,hd)
+            KV, hd = x.shape[3], x.shape[4]
+            # shard KV heads over model when divisible, else head_dim
+            # (uneven KV heads would silently drop to replicated: 8-16x cache)
+            kv_ax, hd_ax = ("model", None) if KV % model_size == 0 else \
+                (None, "model") if hd % model_size == 0 else (None, None)
+            if batch_big:
+                return P(None, daxes, None, kv_ax, hd_ax)
+            return P(None, None, daxes, kv_ax, hd_ax)
+        if name == "S":                               # rwkv (L,B,H,hd,hd)
+            return P(None, daxes if batch_big else None, "model", None, None)
+        if name == "ssm":                             # mamba (L,B,H,N,P)
+            return P(None, daxes if batch_big else None, "model", None, None)
+        if name == "conv":                            # (L,B,W-1,convdim)
+            return P(None, daxes if batch_big else None, None, "model")
+        if name in ("tm_prev", "cm_prev"):            # (L,B,d)
+            return P(None, daxes if batch_big else None, None)
+        return P()
+
+    def sanitized(path, x):
+        return sanitize_spec(mesh, one(path, x), x.shape)
+    return jax.tree_util.tree_map_with_path(sanitized, cache)
+
+
+def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = None):
+    """Deterministic SPION-shaped pattern (diag band + verticals) at the
+    configured alpha density — the sparse-phase stand-in for dry-runs.
+    Tables are tiny ((Ly, nrb, K) int32) and enter the step as inputs."""
+    import numpy as np
+    sp = cfg.spion
+    blk = sp.block_size
+    nrb = max(seq_len // blk, 1)
+    Ly = layers if layers is not None else cfg.num_layers
+    keep = max(1.0 - sp.alpha_quantile, 1.0 / nrb)
+    K = max(int(np.ceil(nrb * keep)) + 1, 2)
+    K = min(K, nrb)
+    rng = np.random.default_rng(0)
+    cols = np.zeros((Ly, nrb, K), np.int32)
+    nval = np.full((Ly, nrb), K, np.int32)
+    for l in range(Ly):
+        for r in range(nrb):
+            c = {r}  # forced diagonal
+            c.add(max(r - 1, 0))                       # band
+            verts = rng.integers(0, nrb, size=K)
+            for v0 in verts:
+                if len(c) >= K:
+                    break
+                c.add(int(v0 if not cfg.causal else min(v0 % (r + 1), r)))
+            cs = sorted(c)[:K]
+            cols[l, r, : len(cs)] = cs
+            nval[l, r] = len(cs)
+            if len(cs) < K:
+                cols[l, r, len(cs):] = cs[-1]          # clamped padding
+    return {"col_idx": jnp.asarray(cols), "nvalid": jnp.asarray(nval), "block": blk}
+
+
+def spion_table_pspecs(tables):
+    return {"col_idx": P(), "nvalid": P(), "block": None}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
+                    total_steps=10_000, n_micro=1, block=None):
+    """Returns f(params_f32, opt_state, batch, step[, tables]) ->
+    (params, opt_state, metrics). `spion` adds a BCSR tables argument
+    ({'col_idx','nvalid'} arrays; the block size is STATIC via `block` /
+    cfg.spion.block_size — an int leaf would turn into a tracer under jit).
+    n_micro > 1 scans microbatches with gradient accumulation (activation
+    memory scales ~1/n_micro; the standard large-scale fit knob)."""
+    bundle = build(cfg)
+    compute_dtype = jnp.dtype(cfg.dtype)
+    static_block = block or cfg.spion.block_size
+
+    def step_fn(params, opt_state, batch, step, tables=None):
+        if tables is not None:
+            tables = {"col_idx": tables["col_idx"], "nvalid": tables["nvalid"],
+                      "block": static_block}
+        def cast(p):
+            return jax.tree_util.tree_map(
+                lambda x: x.astype(compute_dtype)
+                if x.dtype == jnp.float32 and x.ndim >= 2 else x, p)
+
+        def loss_fn(p, mb):
+            return bundle.loss(cast(p), mb, spion=tables)
+
+        if n_micro > 1:
+            def split(x):
+                y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                return constrain_micro(y)
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, mb):
+                acc_loss, acc_g = carry
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_loss + l, acc_g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mbs)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        else:
+            (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr_t = cosine_schedule(step, peak=lr, warmup_steps=200, total_steps=total_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr_t)
+        metrics = {"loss": loss.astype(jnp.float32), "gnorm": gnorm,
+                   "lr": lr_t if hasattr(lr_t, "dtype") else jnp.float32(lr_t)}
+        return params, opt_state, metrics
+
+    def constrain_micro(y):
+        from repro.distributed.sharding import constrain
+        spec = ["batch"] + [None] * (y.ndim - 2)
+        return constrain(y, None, *spec)
+
+    if spion:
+        def with_tables(params, opt_state, batch, step, tables):
+            return step_fn(params, opt_state, batch, step, tables)
+        return with_tables
+    return functools.partial(step_fn, tables=None)
+
+
+def make_prefill_step(cfg: ModelConfig, *, spion=False):
+    bundle = build(cfg)
+
+    def prefill(params, batch, tables=None):
+        logits, _ = bundle.forward(params, batch, spion=tables)
+        return logits
+
+    if spion:
+        return prefill
+    return functools.partial(prefill, tables=None)
+
+
+def make_serve_step(cfg: ModelConfig):
+    bundle = build(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return bundle.decode_step(params, cache, tokens, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings for the step signatures
+# ---------------------------------------------------------------------------
+
+def train_shardings(cfg, mesh, params_tree, opt_tree, batch_tree, *, zero1=True):
+    psp = param_pspecs(params_tree)
+    osp = {
+        "mu": zero1_pspecs(params_tree, mesh) if zero1 else psp,
+        "nu": zero1_pspecs(params_tree, mesh) if zero1 else psp,
+        "count": P(),
+    }
+    bsp = batch_pspecs(cfg, batch_tree, mesh)
+    to_ns = lambda t: jax.tree_util.tree_map(lambda s: _ns(mesh, s), t,
+                                             is_leaf=lambda x: isinstance(x, P))
+    return to_ns(psp), to_ns(osp), to_ns(bsp)

@@ -1,0 +1,179 @@
+"""End-to-end training driver with the full production loop:
+
+  data pipeline -> jitted train step (dense phase) -> SPION capture between
+  epochs -> Frobenius transition -> pattern generation -> sparse phase ->
+  checkpoints (atomic, async, keep-K) -> crash-restart supervisor ->
+  straggler monitor.
+
+CPU-runnable at reduced scale (examples/ wire it up); identical code paths
+lower onto the production meshes (launch/dryrun.py proves compile).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core.spion import SpionController, SpionState
+from repro.data.synthetic import lm_batch_iterator
+from repro.distributed.fault import StepSupervisor, StragglerMonitor
+from repro.distributed.sharding import mesh_context
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models.registry import build
+from repro.optim import adamw_init
+
+# XLA flags for real TPU runs (latency-hiding scheduler = compute/comm overlap)
+TPU_XLA_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_megacore_fusion_allow_ags=true "
+    "--xla_enable_async_collective_permute=true "
+    "--xla_tpu_overlap_compute_collective_tc=true"
+)
+
+
+def masters_of(params):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.ndim >= 2 else x, params)
+
+
+class Trainer:
+    def __init__(self, cfg, *, seq_len, batch, lr=3e-4, total_steps=1000,
+                 ckpt_dir=None, mesh=None, seed=0, steps_per_epoch=50,
+                 data_iter=None, capture_batches=1):
+        self.cfg = cfg
+        self.bundle = build(cfg)
+        self.mesh = mesh
+        self.seq_len = seq_len
+        self.steps_per_epoch = steps_per_epoch
+        self.spion_ctl = SpionController(cfg.spion, causal=cfg.causal, seq_len=seq_len)
+        self.spion_state = SpionState()
+        self.monitor = StragglerMonitor()
+        self.ckpt = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+        self.step = 0
+        rng = np.random.default_rng(seed)
+        self.data = data_iter if data_iter is not None else lm_batch_iterator(
+            rng, batch=batch, seq_len=seq_len + 1, vocab=cfg.vocab_size)
+
+        params = self.bundle.init(jax.random.key(seed))
+        self.params = masters_of(params)
+        self.opt = adamw_init(self.params)
+
+        self._dense_step = jax.jit(make_train_step(
+            cfg, spion=False, lr=lr, total_steps=total_steps), donate_argnums=(0, 1))
+        self._sparse_step = jax.jit(make_train_step(
+            cfg, spion=True, lr=lr, total_steps=total_steps),
+            donate_argnums=(0, 1), static_argnames=())
+        self._capture = jax.jit(
+            lambda p, b, f, blk: self.bundle.forward(
+                p, b, capture={"filt": f, "block": blk})[1]["captured"],
+            static_argnames=("blk",))
+        self.supervisor = StepSupervisor(self._restore_latest)
+
+    # -- checkpoint/restart --------------------------------------------------
+
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+    def save(self):
+        if self.ckpt:
+            self.ckpt.save(self.step, self._state_tree(),
+                           extra={"spion": self.spion_state.to_py(), "step": self.step})
+
+    def _restore_latest(self):
+        if not self.ckpt:
+            return
+        tree, step, extra = self.ckpt.restore(target=self._state_tree())
+        if tree is not None:
+            self.params, self.opt = tree["params"], tree["opt"]
+            self.step = extra.get("step", step or 0)
+            if extra.get("spion"):
+                self.spion_state = SpionState.from_py(extra["spion"])
+
+    def maybe_resume(self):
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self._restore_latest()
+            return True
+        return False
+
+    # -- steps ----------------------------------------------------------------
+
+    def _one_step(self, batch):
+        tables = self.spion_ctl.spion_kwargs(self.spion_state)
+        if tables is not None:
+            self.params, self.opt, metrics = self._sparse_step(
+                self.params, self.opt, batch, jnp.int32(self.step), tables)
+        else:
+            self.params, self.opt, metrics = self._dense_step(
+                self.params, self.opt, batch, jnp.int32(self.step))
+        self.step += 1
+        return metrics
+
+    def _epoch_boundary(self, batch):
+        """SPION capture + transition check on a capture batch."""
+        cap = self.spion_ctl.capture_kwargs(self.spion_state)
+        if cap is None:
+            self.spion_state.epoch += 1
+            return
+        pc = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.dtype(self.cfg.dtype)) if x.ndim >= 2 and
+            x.dtype == jnp.float32 else x, self.params)
+        pooled, frob = self._capture(pc, batch, cap["filt"], cap["block"])
+        self.spion_state = self.spion_ctl.observe_epoch(
+            self.spion_state, np.asarray(pooled), np.asarray(frob))
+
+    def train(self, num_steps, *, ckpt_every=100, log_every=10, log=print):
+        with mesh_context(self.mesh):
+            t_total = time.time()
+            losses = []
+            target = self.step + num_steps
+            while self.step < target:
+                batch = next(self.data)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.time()
+                metrics = self.supervisor.run(self._one_step, batch)
+                dt = time.time() - t0
+                straggler = self.monitor.observe(dt)
+                losses.append(float(metrics["loss"]))
+                if self.step % log_every == 0:
+                    log(f"step {self.step} loss {np.mean(losses[-log_every:]):.4f} "
+                        f"phase {self.spion_state.phase} dt {dt*1e3:.0f}ms"
+                        + (" [straggler]" if straggler else ""))
+                if self.step % self.steps_per_epoch == 0:
+                    self._epoch_boundary(batch)
+                if ckpt_every and self.step % ckpt_every == 0:
+                    self.save()
+            self.save()
+            if self.ckpt:
+                self.ckpt.wait()
+            log(f"done: {num_steps} steps in {time.time()-t_total:.1f}s, "
+                f"final phase={self.spion_state.phase} density={self.spion_state.density}")
+            return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="spion-lra")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tr = Trainer(cfg, seq_len=args.seq_len, batch=args.batch,
+                 ckpt_dir=args.ckpt_dir, mesh=None)
+    tr.maybe_resume()
+    tr.train(args.steps)
+
+
+if __name__ == "__main__":
+    main()

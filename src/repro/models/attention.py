@@ -1,0 +1,264 @@
+"""Attention: dense GQA (train/prefill), KV-cache decode, and the SPION
+pattern-capture path that streams pooled diagonal-conv scores without ever
+materialising the L x L attention matrix (DESIGN.md §2).
+
+Sparse (BCSR) attention lives in repro.core.sparse_attention; this module is
+the dense-phase / baseline path and the serving path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _he, linear, rope
+
+
+class AttnParams(NamedTuple):
+    pass  # attention params are plain dicts; NamedTuple kept out intentionally
+
+
+def attn_init(key, cfg, dtype=jnp.float32, d=None):
+    d = d or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _he(ks[0], (d, cfg.num_heads * hd), d, dtype),
+        "wk": _he(ks[1], (d, cfg.num_kv_heads * hd), d, dtype),
+        "wv": _he(ks[2], (d, cfg.num_kv_heads * hd), d, dtype),
+        "wo": _he(ks[3], (cfg.num_heads * hd, d), cfg.num_heads * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def qkv(cfg, p, x, positions):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd), RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    # constrain on the merged head dim; GSPMD propagates through the reshape
+    # (a 4-D heads constraint forces involuntary remat when H % |model| != 0)
+    q = constrain(q, "batch", None, "model")
+    k = constrain(k, "batch", None, "model")
+    v = constrain(v, "batch", None, "model")
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(cfg, q_pos, k_pos, dtype):
+    """additive mask (..., Sq, Sk): 0 allowed / -inf blocked."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if cfg.causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if cfg.sliding_window:
+        ok &= q_pos[:, None] - k_pos[None, :] < cfg.sliding_window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _attn_chunk(cfg, qc, k, v, qp, k_pos):
+    """One query chunk: qc (B,c,KV,G,hd) vs full k/v -> (B,c,KV,G,hd)."""
+    hd = qc.shape[-1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qc, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + _mask_bias(cfg, qp, k_pos, scores.dtype)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def attn_q_chunk(Sq, Sk):
+    """Query-chunk size: bound the transient scores tensor (flash-style)."""
+    if Sq * Sk <= 2**22:
+        return Sq
+    c = max(128, 2**20 // Sk)
+    while Sq % c:
+        c //= 2
+    return max(c, 1)
+
+
+def dense_attention(cfg, q, k, v, q_pos, k_pos):
+    """softmax(q k^T / sqrt(hd) + mask) v with GQA head grouping.
+
+    q (B,Sq,H,hd); k,v (B,Sk,KV,hd) -> (B,Sq,H,hd).
+    Chunked over query rows with per-chunk remat so the S x S score matrix is
+    never resident (the dense-phase memory baseline is flash-style, as any
+    production TPU stack would be).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    c = attn_q_chunk(Sq, k.shape[1])
+    if c == Sq:
+        out = _attn_chunk(cfg, qg, k, v, q_pos, k_pos)
+        return out.reshape(B, Sq, H, hd)
+    nq = Sq // c
+    qs = jnp.moveaxis(qg.reshape(B, nq, c, KV, G, hd), 1, 0)
+    qps = q_pos.reshape(nq, c)
+
+    @jax.checkpoint
+    def one(args):
+        qc, qp = args
+        return _attn_chunk(cfg, qc, k, v, qp, k_pos)
+
+    # scan (not lax.map) so the dry-run can unroll: a rolled body is counted
+    # ONCE by cost_analysis, silently hiding (nq-1)/nq of the attention FLOPs
+    _, out = jax.lax.scan(lambda _, x: (None, one(x)), None, (qs, qps),
+                          unroll=min(cfg.scan_unroll, nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return out
+
+
+def attn_out(cfg, p, ctx):
+    B, S = ctx.shape[:2]
+    y = ctx.reshape(B, S, -1) @ p["wo"].astype(ctx.dtype)
+    mode = getattr(cfg, "act_shard", None)
+    if mode == "d":
+        y = constrain(y, "batch", None, "model")
+    elif mode == "seq":
+        y = constrain(y, "batch", "model", None)
+    else:
+        y = constrain(y, "batch", None, None)
+    if getattr(cfg, "ar_bf16", False):
+        y = jax.lax.optimization_barrier(y)
+    return y
+
+
+def dense_mha(cfg, p, x, positions, kv_positions=None, xkv=None):
+    """Full dense MHA block (self- or cross-attention)."""
+    if xkv is None:
+        q, k, v = qkv(cfg, p, x, positions)
+        kp = positions
+    else:  # cross-attention: q from x, k/v from xkv (no RoPE on cross in whisper)
+        q, _, _ = qkv(cfg, p, x, positions)
+        _, k, v = qkv(cfg, p, xkv, kv_positions)
+        kp = kv_positions
+    ctx = dense_attention(cfg, q, k, v, positions[0] if positions.ndim > 1 else positions,
+                          kp[0] if kp.ndim > 1 else kp)
+    return attn_out(cfg, p, ctx)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def decode_attention(cfg, q, k_cache, v_cache, pos, kpos=None):
+    """One-token decode: q (B,1,H,hd); caches (B,S_cache,KV,hd); pos scalar
+    (current token index). `kpos` gives the absolute position stored in each
+    cache slot (defaults to arange — plain append cache). Sliding-window archs
+    use a ring buffer: slot s holds token pos - ((pos - s) % W)."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    S = k_cache.shape[1]
+    # NOTE (hillclimb A it2, refuted): forcing the attention einsums to
+    # consume the hd-sharded cache (partial scores + psum) removed the
+    # involuntary-remat copies but cost 6x flops and 10x collective bytes —
+    # the per-layer cache reshard copy is the cheaper evil. See EXPERIMENTS.md.
+    qg = q.reshape(B, KV, G, hd)
+    k_cache = k_cache.astype(q.dtype)  # fp8 caches upcast for the MXU einsum
+    v_cache = v_cache.astype(q.dtype)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) / np.sqrt(hd)
+    if kpos is None:
+        kpos = jnp.arange(S)
+    ok = (kpos >= 0) & (kpos <= pos)
+    if cfg.sliding_window:
+        ok &= kpos > pos - cfg.sliding_window
+    scores = jnp.where(ok[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def cache_slot(cfg, pos, cache_len):
+    """Ring-buffer slot for the token at absolute position `pos`."""
+    return pos % cache_len
+
+
+def ring_kpos(pos, cache_len):
+    """Absolute positions held by each ring-buffer slot at decode step `pos`
+    (after inserting token `pos`): slot s -> pos - ((pos - s) mod cache_len)."""
+    s = jnp.arange(cache_len)
+    return pos - jnp.mod(pos - s, cache_len)
+
+
+def update_cache(k_cache, v_cache, k_new, v_new, slot):
+    """Insert one token's k/v at index `slot`. Caches (B,S,KV,hd); new (B,1,KV,hd)."""
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SPION pattern capture: pooled diagonal-conv of A^s, streamed (exact Eq. 3+4)
+# ---------------------------------------------------------------------------
+
+def capture_pooled_scores(cfg, q, k, q_pos, k_pos, filt: jnp.ndarray, block: int):
+    """Return (pooled, frob_sq):
+      pooled  = avgpool_BxB( diagconv_F(A^s) ) of the *head-and-batch-averaged*
+                attention probabilities, shape (L/B, L/B), streamed row-panel
+                by row-panel so peak memory is O(panel x L), not O(L^2);
+      frob_sq = sum(A^s ** 2) of the averaged scores (Eq. 2 transition term).
+
+    Matches paper Eq. 3 (conv_out(i,j) = sum_f A(i+f, j+f) filter(f)) with
+    zero padding, then Eq. 4 average pooling.
+    """
+    B_, Sq, H, hd = q.shape
+    L = k.shape[1]
+    F = int(filt.shape[0])
+    nb = Sq // block
+    KV = k.shape[2]
+    G = H // KV
+
+    panel = block  # one block-row of conv output per step; needs F halo rows
+    # pad q rows by F so every dynamic_slice is in-bounds; padded rows are
+    # masked to zero after the softmax (Eq. 3 zero padding).
+    qp_ = jnp.pad(q, ((0, 0), (0, F), (0, 0), (0, 0)))
+    qpos_ = jnp.concatenate([q_pos, q_pos[-1] + 1 + jnp.arange(F)])
+
+    def probs_rows(r0, rows):
+        """A^s rows [r0, r0+rows) averaged over batch+heads -> (rows, L)."""
+        qs = jax.lax.dynamic_slice(qp_, (0, r0, 0, 0), (B_, rows, H, hd))
+        qg = qs.reshape(B_, rows, KV, G, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) / np.sqrt(hd)
+        qpos = jax.lax.dynamic_slice(qpos_, (r0,), (rows,))
+        s = s + _mask_bias(cfg, qpos, k_pos, s.dtype)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.mean(p, axis=(0, 1, 2))  # (rows, L)
+        valid = (r0 + jnp.arange(rows)) < Sq
+        return jnp.where(valid[:, None], p, 0.0)
+
+    def one_block_row(I):
+        r0 = I * block
+        a = probs_rows(r0, panel + F)  # halo: conv row i needs A rows [i, i+F)
+        frob = jnp.sum(a[:panel] ** 2)  # rows r0..r0+panel of A^s
+        # conv_out rows r0..r0+block: sum_f w_f * A[r + f, cols shifted by f]
+        def body(f, acc):
+            w = filt[f]
+            rowpanel = jax.lax.dynamic_slice(a, (f, 0), (panel, L))
+            shifted = jax.lax.dynamic_slice(  # columns shifted left by f, zero fill
+                jnp.pad(rowpanel, ((0, 0), (0, F))), (0, f), (panel, L))
+            return acc + w * shifted
+        conv = jax.lax.fori_loop(0, F, body, jnp.zeros((panel, L), jnp.float32))
+        # average-pool this block row: (panel, L) -> (L/B,)
+        return conv.reshape(block, nbk, block).mean(axis=(0, 2)), frob
+
+    nbk = L // block
+    out, frobs = jax.lax.map(one_block_row, jnp.arange(nb))
+    return out, jnp.sum(frobs)  # (Sq/B, L/B), scalar

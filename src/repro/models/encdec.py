@@ -1,0 +1,205 @@
+"""Whisper-family encoder-decoder backbone. The mel/conv frontend is a STUB:
+batch["frames"] carries precomputed frame embeddings (B, S_enc, d) per the
+assignment spec. Sinusoidal positions on the encoder, learned on the decoder,
+LayerNorm + GELU — matching the whisper architecture family.
+SPION applies to encoder self-attention and decoder self-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_attention import BCSR, bcsr_attention
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import layers as Lyr
+
+
+MAX_POS = 65_536  # learned-position table bound (largest non-RoPE shape)
+
+
+def _enc_cfg(cfg):
+    return cfg.replace(causal=False)
+
+
+def enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "attn": A.attn_init(ks[0], cfg, dtype=dtype),
+        "mlp_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "mlp": Lyr.mlp_init(ks[1], cfg, dtype=dtype),
+    }
+
+
+def dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    p = enc_layer_init(key, cfg, dtype)
+    p["cross_norm"] = Lyr.layernorm_init(cfg.d_model, jnp.float32)
+    p["cross"] = A.attn_init(ks[2], cfg, dtype=dtype)
+    return p
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    ekeys = jax.random.split(ks[0], cfg.encoder_layers)
+    dkeys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: enc_layer_init(k, cfg, dtype))(ekeys),
+        "enc_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "tok_embed": Lyr.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": {"w": (jax.random.normal(ks[3], (MAX_POS, cfg.d_model)) * 0.02).astype(dtype)},
+        "dec_layers": jax.vmap(lambda k: dec_layer_init(k, cfg, dtype))(dkeys),
+        "final_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+    }
+
+
+def _enc_block(cfg, lp, h, positions, spion_layer, capture):
+    ecfg = _enc_cfg(cfg)
+    x = Lyr.layernorm(lp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
+    q, k, v = A.qkv(ecfg, lp["attn"], x, positions)
+    cap = jnp.zeros((), jnp.float32)
+    if capture is not None:
+        cap = A.capture_pooled_scores(ecfg, q, k, positions, positions,
+                                      capture["filt"], capture["block"])
+    if spion_layer is not None:
+        ctx = bcsr_attention(ecfg, q, k, v,
+                             BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
+                                  spion_layer["block"], x.shape[1]))
+    else:
+        ctx = A.dense_attention(ecfg, q, k, v, positions, positions)
+    h = h + A.attn_out(ecfg, lp["attn"], ctx)
+    x = Lyr.layernorm(lp["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
+    return h + Lyr.mlp(cfg, lp["mlp"], x), cap
+
+
+def encode(params, cfg, frames):
+    dtype = jnp.dtype(cfg.dtype)
+    h = frames.astype(dtype)
+    S = h.shape[1]
+    h = h + Lyr.sinusoidal_positions(S, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        def run(h, lp):
+            y, _ = _enc_block(cfg, lp, h, positions, None, None)
+            return y
+        if cfg.remat:
+            run = jax.checkpoint(run, prevent_cse=False)
+        return run(h, lp), jnp.zeros(())
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"], unroll=cfg.scan_unroll)
+    return Lyr.layernorm(params["enc_norm"], h.astype(jnp.float32)).astype(dtype)
+
+
+def forward(params, cfg, batch, *, spion=None, capture=None):
+    """batch: frames (B,S_enc,d), tokens (B,S_dec)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc = encode(params, cfg, batch["frames"])
+    enc = constrain(enc, "batch", None, None)
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    h = h + params["pos_embed"]["w"][:S].astype(dtype)[None]
+    positions = jnp.arange(S)
+    enc_positions = jnp.arange(enc.shape[1])
+
+    def body(h, xs):
+        lp, sp = xs
+
+        def run(h, lp, sp):
+            # causal self-attention (SPION-able)
+            x = Lyr.layernorm(lp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
+            q, k, v = A.qkv(cfg, lp["attn"], x, positions)
+            cap = jnp.zeros((), jnp.float32)
+            if capture is not None:
+                cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
+                                              capture["filt"], capture["block"])
+            if sp is not None:
+                ctx = bcsr_attention(cfg, q, k, v,
+                                     BCSR(sp["col_idx"], sp["nvalid"], spion["block"], S))
+            else:
+                ctx = A.dense_attention(cfg, q, k, v, positions, positions)
+            h = h + A.attn_out(cfg, lp["attn"], ctx)
+            # cross-attention (dense; non-causal)
+            ccfg = _enc_cfg(cfg)
+            x = Lyr.layernorm(lp["cross_norm"], h.astype(jnp.float32)).astype(h.dtype)
+            qc, _, _ = A.qkv(ccfg, lp["cross"], x, positions)
+            _, kc, vc = A.qkv(ccfg, lp["cross"], enc, enc_positions)
+            ctx = A.dense_attention(ccfg, qc, kc, vc, positions, enc_positions)
+            h = h + A.attn_out(ccfg, lp["cross"], ctx)
+            x = Lyr.layernorm(lp["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
+            return h + Lyr.mlp(cfg, lp["mlp"], x), cap
+        if cfg.remat:
+            run = jax.checkpoint(run, prevent_cse=False)
+        h, cap = run(h, lp, sp)
+        return h, cap
+
+    sp_stacked = None if spion is None else {"col_idx": spion["col_idx"], "nvalid": spion["nvalid"]}
+    h, caps = jax.lax.scan(body, h, (params["dec_layers"], sp_stacked),
+                           unroll=cfg.scan_unroll)
+    h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["tok_embed"], h)
+    aux = {"captured": caps} if capture is not None else {}
+    return constrain(logits, "batch", None, "model"), aux
+
+
+# -- decode ------------------------------------------------------------------
+
+def init_cache(cfg, batch_size, max_len, enc_len=None, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    enc_len = enc_len or max_len
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+        # precomputed cross-attention K/V from the encoder output
+        "ck": jnp.zeros((L, batch_size, enc_len, cfg.num_kv_heads, hd), dtype),
+        "cv": jnp.zeros((L, batch_size, enc_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def precompute_cross(params, cfg, frames):
+    """Run encoder once; fill ck/cv for every decoder layer."""
+    enc = encode(params, cfg, frames)
+    enc_positions = jnp.arange(enc.shape[1])
+    ccfg = _enc_cfg(cfg)
+
+    def per_layer(lp):
+        _, kc, vc = A.qkv(ccfg, lp["cross"], enc, enc_positions)
+        return kc, vc
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])
+    return ck, cv
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    h = h + jax.lax.dynamic_slice_in_dim(params["pos_embed"]["w"], pos, 1, 0).astype(dtype)[None]
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    ccfg = _enc_cfg(cfg)
+    enc_len = cache["ck"].shape[3 - 1]
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        x = Lyr.layernorm(lp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions.astype(jnp.int32))
+        kc, vc = A.update_cache(kc, vc, k_new, v_new, pos)
+        ctx = A.decode_attention(cfg, q, kc, vc, pos)
+        h = h + A.attn_out(cfg, lp["attn"], ctx)
+        x = Lyr.layernorm(lp["cross_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        qc, _, _ = A.qkv(ccfg, lp["cross"], x, positions)
+        ctx = A.decode_attention(ccfg.replace(causal=False), qc, ck, cv, jnp.asarray(enc_len - 1))
+        h = h + A.attn_out(ccfg, lp["cross"], ctx)
+        x = Lyr.layernorm(lp["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        h = h + Lyr.mlp(cfg, lp["mlp"], x)
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["dec_layers"], cache["k"], cache["v"],
+                                         cache["ck"], cache["cv"]), unroll=cfg.scan_unroll)
+    h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["tok_embed"], h)[:, 0]
+    return logits, {**cache, "k": ks, "v": vs}

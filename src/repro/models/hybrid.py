@@ -1,0 +1,172 @@
+"""zamba2 hybrid: Mamba2 backbone + ONE shared attention block applied every
+k-th layer (weight sharing across applications — the zamba trick). SPION
+applies to the shared attention block only; each *application* gets its own
+layer-wise pattern (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_attention import BCSR, bcsr_attention
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import layers as Lyr
+from repro.models import mamba as M
+
+
+def n_attn_apps(cfg):
+    k = cfg.hybrid_attn_every
+    return cfg.num_layers // k if k else 0
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    lkeys = jax.random.split(ks[0], cfg.num_layers)
+
+    def layer_init(k):
+        return {
+            "norm": Lyr.rmsnorm_init(cfg.d_model, jnp.float32),
+            "mamba": M.mamba_init(k, cfg, dtype),
+        }
+
+    shared = {
+        "attn_norm": Lyr.rmsnorm_init(cfg.d_model, jnp.float32),
+        "attn": A.attn_init(ks[1], cfg, dtype=dtype),
+        "mlp_norm": Lyr.rmsnorm_init(cfg.d_model, jnp.float32),
+        "mlp": Lyr.mlp_init(ks[2], cfg, dtype=dtype),
+    }
+    return {
+        "tok_embed": Lyr.embed_init(ks[3], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(layer_init)(lkeys),
+        "shared_attn": shared,
+        "final_norm": Lyr.rmsnorm_init(cfg.d_model, jnp.float32),
+        "lm_head": Lyr.embed_init(ks[4], cfg.vocab_size, cfg.d_model, dtype),
+    }
+
+
+def _shared_attn_block(cfg, sp, h, positions, bcsr_tables, app_idx, capture):
+    x = Lyr.rmsnorm(sp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
+    q, k, v = A.qkv(cfg, sp["attn"], x, positions)
+    cap = jnp.zeros((), jnp.float32)
+    if capture is not None:
+        cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
+                                      capture["filt"], capture["block"])
+    if bcsr_tables is not None:
+        col = jnp.take(bcsr_tables["col_idx"], app_idx, axis=0)
+        nv = jnp.take(bcsr_tables["nvalid"], app_idx, axis=0)
+        ctx = bcsr_attention(cfg, q, k, v,
+                             BCSR(col, nv, bcsr_tables["block"], x.shape[1]))
+    else:
+        ctx = A.dense_attention(cfg, q, k, v, positions, positions)
+    h = h + A.attn_out(cfg, sp["attn"], ctx)
+    x = Lyr.rmsnorm(sp["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
+    return h + Lyr.mlp(cfg, sp["mlp"], x), cap
+
+
+def forward(params, cfg, batch, *, spion=None, capture=None):
+    dtype = jnp.dtype(cfg.dtype)
+    h = Lyr.embed(params["tok_embed"], batch["tokens"], dtype)
+    h = constrain(h, "batch", None, None)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    every = cfg.hybrid_attn_every
+    shared = params["shared_attn"]
+
+    def body(carry, xs):
+        h, app = carry
+        lp, idx = xs
+
+        def run(h, lp):
+            x = Lyr.rmsnorm(lp["norm"], h.astype(jnp.float32)).astype(h.dtype)
+            y, _ = M.mamba_apply(cfg, lp["mamba"], x)
+            return h + y
+        if cfg.remat:
+            run = jax.checkpoint(run, prevent_cse=False)
+        h = run(h, lp)
+
+        is_attn = (idx % every) == (every - 1)
+
+        def with_attn(h):
+            return _shared_attn_block(cfg, shared, h, positions, spion, app, capture)
+
+        def without(h):
+            if capture is not None:
+                nb = S // capture["block"]
+                return h, (jnp.zeros((nb, nb), jnp.float32), jnp.zeros((), jnp.float32))
+            return h, jnp.zeros((), jnp.float32)
+
+        h, cap = jax.lax.cond(is_attn, with_attn, without, h)
+        app = app + jnp.where(is_attn, 1, 0)
+        return (h, app), cap
+
+    (h, _), caps = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.int32)),
+        (params["layers"], jnp.arange(cfg.num_layers)), unroll=cfg.scan_unroll)
+    h = Lyr.rmsnorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["lm_head"], h)
+    aux = {"captured": caps} if capture is not None else {}
+    return constrain(logits, "batch", None, "model"), aux
+
+
+# -- decode ------------------------------------------------------------------
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    napps = n_attn_apps(cfg)
+    hd = cfg.resolved_head_dim
+    st = M.init_state(cfg, batch_size)
+    return {
+        "conv": jnp.stack([st["conv"]] * cfg.num_layers),
+        "ssm": jnp.stack([st["ssm"]] * cfg.num_layers),
+        "k": jnp.zeros((napps, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((napps, batch_size, max_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    every = cfg.hybrid_attn_every
+    shared = params["shared_attn"]
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    napps = n_attn_apps(cfg)
+
+    # mamba layers scanned; attention caches updated by app index
+    def body(carry, xs):
+        h, app, kall, vall = carry
+        lp, conv_st, ssm_st, idx = xs
+        x = Lyr.rmsnorm(lp["norm"], h.astype(jnp.float32)).astype(h.dtype)
+        y, st = M.mamba_apply(cfg, lp["mamba"], x, state={"conv": conv_st, "ssm": ssm_st})
+        h = h + y
+        is_attn = (idx % every) == (every - 1)
+
+        def with_attn(operand):
+            h, kall, vall = operand
+            kc = jnp.take(kall, app, axis=0)
+            vc = jnp.take(vall, app, axis=0)
+            x = Lyr.rmsnorm(shared["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
+            q, k_new, v_new = A.qkv(cfg, shared["attn"], x, positions.astype(jnp.int32))
+            kc, vc = A.update_cache(kc, vc, k_new, v_new, pos)
+            ctx = A.decode_attention(cfg, q, kc, vc, pos)
+            h = h + A.attn_out(cfg, shared["attn"], ctx)
+            x = Lyr.rmsnorm(shared["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
+            h = h + Lyr.mlp(cfg, shared["mlp"], x)
+            kall = jax.lax.dynamic_update_index_in_dim(kall, kc, app, 0)
+            vall = jax.lax.dynamic_update_index_in_dim(vall, vc, app, 0)
+            return h, kall, vall
+
+        if napps > 0:  # static: reduced 1-layer configs have no attn apps
+            h, kall, vall = jax.lax.cond(is_attn, with_attn, lambda o: o,
+                                         (h, kall, vall))
+            app = app + jnp.where(is_attn, 1, 0)
+        return (h, app, kall, vall), (st["conv"], st["ssm"])
+
+    carry = (h, jnp.zeros((), jnp.int32), cache["k"], cache["v"])
+    (h, _, kall, vall), (convs, ssms) = jax.lax.scan(
+        body, carry, (params["layers"], cache["conv"], cache["ssm"], jnp.arange(cfg.num_layers)),
+        unroll=cfg.scan_unroll)
+    h = Lyr.rmsnorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["lm_head"], h)[:, 0]
+    return logits, {"conv": convs, "ssm": ssms, "k": kall, "v": vall}

@@ -1,0 +1,150 @@
+"""Pure-functional building blocks. Params are plain dict pytrees; every
+layer is (init, apply) with no hidden state. Compute dtype follows the input;
+norm statistics and softmax run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+
+def _he(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape) / np.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"].astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+def norm_init(cfg, d=None, dtype=jnp.float32):
+    d = d or cfg.d_model
+    return layernorm_init(d, dtype) if cfg.act in ("gelu", "relu") and cfg.family in ("encoder", "audio") \
+        else rmsnorm_init(d, dtype)
+
+
+def norm(cfg, p, x):
+    if "bias" in p:
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+# -- linear / embedding ------------------------------------------------------
+
+def linear_init(key, din, dout, bias=False, dtype=jnp.float32):
+    p = {"w": _he(key, (din, dout), din, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens, dtype):
+    return jnp.take(p["w"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p, x):
+    """Tied or standalone LM head: x (.., d) @ w.T (vocab, d)."""
+    return x @ p["w"].astype(x.dtype).T
+
+
+# -- positions ---------------------------------------------------------------
+
+def sinusoidal_positions(length, d):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10_000 ** (2 * dim / d))
+    ang = pos * inv
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+def rope(x, positions, theta):
+    """x: (..., seq, heads, head_dim). positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- mlp ---------------------------------------------------------------------
+
+def mlp_init(key, cfg, d=None, ff=None, dtype=jnp.float32):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":  # gated (swiglu)
+        return {
+            "w_in": _he(ks[0], (d, ff), d, dtype),
+            "w_gate": _he(ks[1], (d, ff), d, dtype),
+            "w_out": _he(ks[2], (ff, d), ff, dtype),
+        }
+    return {
+        "w_in": _he(ks[0], (d, ff), d, dtype),
+        "w_out": _he(ks[2], (ff, d), ff, dtype),
+    }
+
+
+def mlp(cfg, p, x):
+    h = x @ p["w_in"].astype(x.dtype)
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * h
+    elif cfg.act == "relu":
+        h = jax.nn.relu(h)
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "model")
+    y = h @ p["w_out"].astype(x.dtype)
+    mode = getattr(cfg, "act_shard", None)
+    if mode == "d":
+        y = constrain(y, "batch", None, "model")
+    elif mode == "seq":
+        y = constrain(y, "batch", "model", None)
+    if getattr(cfg, "ar_bf16", False):
+        y = jax.lax.optimization_barrier(y)
+    return y
+
+
+def dropout(key, x, rate, train):
+    if not train or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0).astype(x.dtype)

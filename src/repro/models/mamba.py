@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) layer — chunked state-space dual form.
+
+Per head h with scalar decay a_t = Δ_t·A_h (<= 0):
+    h_t = exp(a_t) h_{t-1} + Δ_t (B_t ⊗ x_t)     state (N, P)
+    y_t = C_t @ h_t + D_h x_t
+All exponents are cumsum differences <= 0 (safe). Short causal depthwise
+conv (width 4) on the xBC stream, gated output, as in the reference model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as Lyr
+from repro.models.layers import _he
+
+CONV_W = 4
+NGROUPS = 1
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    H = inner // ssm.head_dim
+    N = ssm.state_size
+    conv_dim = inner + 2 * NGROUPS * N
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _he(ks[0], (d, 2 * inner + 2 * NGROUPS * N + H), d, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_W, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus(-2) ~ .13
+        "out_norm": Lyr.rmsnorm_init(inner, jnp.float32),
+        "out_proj": _he(ks[2], (inner, d), inner, dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """depthwise causal conv: x (B,S,C), w (W,C). state (B,W-1,C) for decode."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):].astype(jnp.float32) if state is not None else None
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk, unroll=1):
+    """x (b,S,H,P); dt (b,S,H) (>0); A (H,) (<0); B,C (b,S,G,N); D (H,).
+    Returns y (b,S,H,P)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Ch = min(chunk, S)
+    n = S // Ch
+    xr = x.reshape(b, n, Ch, H, P).astype(jnp.float32)
+    dtr = dt.reshape(b, n, Ch, H).astype(jnp.float32)
+    Br = B.reshape(b, n, Ch, NGROUPS, N).astype(jnp.float32)
+    Cr = C.reshape(b, n, Ch, NGROUPS, N).astype(jnp.float32)
+
+    # chunk-PARALLEL form (see rwkv.wkv6_chunked): heavy math batched over
+    # the chunk axis; only the small state combine is sequential.
+    a = dtr * A                                     # (b,n,Ch,H) <= 0
+    cum = jnp.cumsum(a, axis=2)                     # inclusive
+    last = cum[:, :, -1]                            # (b,n,H)
+
+    dec_k = jnp.exp(last[:, :, None] - cum) * dtr   # (b,n,Ch,H)
+    delta = jnp.einsum("bnsgq,bnshp,bnsh->bnhqp", Br, xr, dec_k)
+    decay = jnp.exp(last)                           # (b,n,H)
+
+    def comb(S_in, xcomb):
+        d, dl = xcomb
+        return S_in * d[..., None, None] + dl, S_in
+
+    S0 = jnp.zeros((b, H, N, P), jnp.float32)
+    _, S_in = jax.lax.scan(comb, S0, (jnp.swapaxes(decay, 0, 1),
+                                      jnp.swapaxes(delta, 0, 1)))
+    S_in = jnp.swapaxes(S_in, 0, 1)                 # (b,n,H,N,P)
+
+    # inter-chunk: y_t += exp(cum_t) C_t @ S_in
+    y_inter = jnp.einsum("bntgq,bnhqp->bnthp", Cr, S_in) * jnp.exp(cum)[..., None]
+
+    # intra-chunk: M_ts = C_t.B_s exp(cum_t - cum_s) dt_s, s <= t
+    Dm = cum[:, :, :, None] - cum[:, :, None, :]    # (b,n,Ch,Ch,H)
+    mask = (jnp.arange(Ch)[:, None] >= jnp.arange(Ch)[None, :])[None, None, :, :, None]
+    expD = jnp.where(mask, jnp.exp(jnp.minimum(Dm, 0.0)), 0.0)
+    CB = jnp.einsum("bntgq,bnsgq->bnts", Cr, Br)
+    M = CB[..., None] * expD * dtr[:, :, None, :, :]
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", M, xr)
+
+    y = (y_inter + y_intra).astype(x.dtype).reshape(b, S, H, P)
+    return y + x * D[None, None, :, None].astype(x.dtype)
+
+
+def mamba_apply(cfg, p, x, state=None):
+    """x (B,S,d). state None | dict(conv (B,W-1,convdim), ssm (B,H,N,P))."""
+    Bsz, S, d = x.shape
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    H = inner // ssm.head_dim
+    P = ssm.head_dim
+    N = ssm.state_size
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    # split: z (inner), xBC (inner + 2GN), dt (H)
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner:inner + inner + 2 * NGROUPS * N]
+    dt_raw = zxbcdt[..., -H:]
+    xBC = constrain(xBC, "batch", None, "model")
+
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), conv_state)
+    xs = xBC[..., :inner].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., inner:inner + NGROUPS * N].reshape(Bsz, S, NGROUPS, N)
+    Cmat = xBC[..., inner + NGROUPS * N:].reshape(Bsz, S, NGROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if state is None:
+        y = ssd_chunked(xs, dt, A, Bmat, Cmat, p["D"], ssm.chunk, unroll=cfg.scan_unroll)
+        new_ssm = None
+    else:
+        S_in = state["ssm"]  # (B,H,N,P)
+        a = (dt[:, 0] * A)  # (B,H)
+        x1 = xs[:, 0].astype(jnp.float32)
+        B1 = Bmat[:, 0, 0].astype(jnp.float32)  # (B,N) with G=1
+        C1 = Cmat[:, 0, 0].astype(jnp.float32)
+        S_new = S_in * jnp.exp(a)[..., None, None] + \
+            jnp.einsum("bn,bhp,bh->bhnp", B1, x1, dt[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", C1, S_new) + x1 * p["D"][None, :, None]
+        y = y[:, None].astype(x.dtype)
+        new_ssm = S_new
+
+    y = y.reshape(Bsz, S, inner)
+    y = Lyr.rmsnorm(p["out_norm"], y.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = None if state is None else {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state
+
+
+def init_state(cfg, batch_size):
+    ssm = cfg.ssm
+    inner = ssm.expand * cfg.d_model
+    H = inner // ssm.head_dim
+    conv_dim = inner + 2 * NGROUPS * ssm.state_size
+    return {
+        "conv": jnp.zeros((batch_size, CONV_W - 1, conv_dim), jnp.float32),
+        "ssm": jnp.zeros((batch_size, H, ssm.state_size, ssm.head_dim), jnp.float32),
+    }

@@ -1,0 +1,95 @@
+"""GShard/Switch-style top-k MoE with einsum dispatch — GSPMD-friendly.
+
+Tokens are grouped; the dispatch/combine one-hots are (G, S_g, E, C) so GSPMD
+shards groups over the data axes and experts over the model axis (arctic:
+128e/16 = 8 experts per device; mixtral: 8e -> TP-within-expert via the d_ff
+rules in distributed/sharding.py).
+Aux losses: load-balance (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _he
+
+GROUP = 1024            # tokens per dispatch group
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, ff = cfg.d_model, cfg.d_ff
+    E = cfg.moe.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": _he(ks[0], (d, E), d, jnp.float32)},
+        "experts": {
+            "w_in": _he(ks[1], (E, d, ff), d, dtype),
+            "w_gate": _he(ks[2], (E, d, ff), d, dtype),
+            "w_out": _he(ks[3], (E, ff, d), ff, dtype),
+        },
+    }
+    if cfg.moe.dense_residual_ff:
+        from repro.models.layers import mlp_init
+        p["dense_residual"] = mlp_init(ks[4], cfg, ff=cfg.moe.dense_residual_ff, dtype=dtype)
+    return p
+
+
+def moe_apply(cfg, p, x):
+    """x (B,S,d) -> (y (B,S,d), aux dict)."""
+    B, S, d = x.shape
+    E = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    T = B * S
+    g = max(1, T // GROUP)
+    sg = T // g
+    xt = x.reshape(g, sg, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)  # (g, sg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # capacity per expert; floor keeps tiny (decode) batches dropless
+    C = max(int(sg * k * CAPACITY_FACTOR / E), min(sg * k, 8))
+
+    # top-k routing with per-expert capacity via cumulative position
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # (g, sg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)  # renormalise
+
+    dispatch = jnp.zeros((g, sg, E, C), x.dtype)
+    combine = jnp.zeros((g, sg, E, C), jnp.float32)
+    for slot in range(k):
+        onehot = jax.nn.one_hot(gate_idx[..., slot], E, dtype=jnp.float32)  # (g,sg,E)
+        pos = jnp.cumsum(onehot, axis=1) - onehot  # position within expert
+        for prev in range(slot):
+            # slot-major ordering: all of slot `prev`'s assignments precede
+            # slot `slot`'s, so offset by the TOTAL per-expert count (GShard)
+            prev_oh = jax.nn.one_hot(gate_idx[..., prev], E, dtype=jnp.float32)
+            pos = pos + jnp.sum(prev_oh, axis=1, keepdims=True)
+        keep = (pos < C) * onehot
+        posc = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)   # (g,sg,E->?,C)
+        d_oh = keep[..., None] * posc                                         # (g,sg,E,C)
+        dispatch = dispatch + d_oh.astype(x.dtype)
+        combine = combine + d_oh * gate_vals[..., slot][..., None, None]
+
+    dispatch = constrain(dispatch, "batch", None, "model", None)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt)                # (g,E,C,d)
+    xe = constrain(xe, "batch", "model", None, None)
+    w = p["experts"]
+    h = jnp.einsum("gecd,edf->gecf", xe, w["w_in"].astype(x.dtype))
+    h = h * jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w["w_gate"].astype(x.dtype)))
+    ye = jnp.einsum("gecf,efd->gecd", h, w["w_out"].astype(x.dtype))
+    ye = constrain(ye, "batch", "model", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    # aux losses
+    me = jnp.mean(probs, axis=1)                                    # (g,E)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=1)
+    lb_loss = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    y = y.reshape(B, S, d)
+    if "dense_residual" in p:
+        from repro.models.layers import mlp
+        y = y + mlp(cfg, p["dense_residual"], x)
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss}

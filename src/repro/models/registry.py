@@ -1,0 +1,174 @@
+"""Uniform model API over all families.
+
+build(cfg) -> ModelBundle with:
+    init(key) -> params
+    forward(params, batch, *, spion=None, capture=None) -> (logits, aux)
+    loss(params, batch, *, spion=None, capture=None) -> (loss, aux)
+    init_cache(batch_size, max_len) -> cache
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+input_specs(cfg, shape) -> ShapeDtypeStruct pytrees for the dry-run
+(train/prefill: kwargs of forward-batch; decode: (cache, tokens, pos)).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, hybrid, rwkv, transformer
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+class ModelBundle(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        return transformer
+    if cfg.family == "ssm":
+        return rwkv
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family in ("audio", "encdec"):
+        return encdec
+    raise ValueError(cfg.family)
+
+
+def cross_entropy(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    mod = _family_module(cfg)
+
+    def init(key):
+        return mod.init(key, cfg)
+
+    def forward(params, batch, *, spion=None, capture=None):
+        return mod.forward(params, cfg, batch, spion=spion, capture=capture)
+
+    def loss(params, batch, *, spion=None, capture=None):
+        logits, aux = forward(params, batch, spion=spion, capture=capture)
+        labels = batch["labels"]
+        if cfg.num_patch_tokens and "patch_embeds" in batch:
+            # VLM: logits cover [patch, text]; loss over text positions only
+            logits = logits[:, cfg.num_patch_tokens:]
+        mask = batch.get("loss_mask")
+        l = cross_entropy(logits, labels, mask)
+        if cfg.moe is not None and "lb_loss" in aux:
+            l = l + MOE_LB_WEIGHT * aux["lb_loss"] + MOE_Z_WEIGHT * aux["z_loss"]
+        return l, aux
+
+    def init_cache(batch_size, max_len, **kw):
+        return mod.init_cache(cfg, batch_size, max_len, **kw)
+
+    def decode_step(params, cache, tokens, pos):
+        return mod.decode_step(params, cfg, cache, tokens, pos)
+
+    return ModelBundle(cfg, init, forward, loss, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Returns {'batch': ...} for train/prefill or
+    {'cache': ..., 'tokens': ..., 'pos': ...} for decode shapes."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family in ("audio", "encdec"):
+            batch = {
+                "frames": _sd((B, S, cfg.d_model), cfg.dtype),
+                "tokens": _sd((B, S), tok),
+                "labels": _sd((B, S), tok),
+            }
+        elif cfg.family == "vlm":
+            S_text = S - cfg.num_patch_tokens
+            batch = {
+                "tokens": _sd((B, S_text), tok),
+                "patch_embeds": _sd((B, cfg.num_patch_tokens, cfg.d_model), cfg.dtype),
+                "labels": _sd((B, S_text), tok),
+            }
+        else:
+            batch = {"tokens": _sd((B, S), tok), "labels": _sd((B, S), tok)}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return {"batch": batch}
+    # decode: one new token against a KV cache / state of length S
+    bundle_cache = cache_specs(cfg, B, S)
+    return {
+        "cache": bundle_cache,
+        "tokens": _sd((B, 1), tok),
+        "pos": _sd((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int):
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        H = cfg.num_heads
+        L, d = cfg.num_layers, cfg.d_model
+        return {
+            "tm_prev": _sd((L, B, d), jnp.float32),
+            "cm_prev": _sd((L, B, d), jnp.float32),
+            "S": _sd((L, B, H, hd, hd), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        from repro.models.mamba import CONV_W, NGROUPS
+        ssm = cfg.ssm
+        inner = ssm.expand * cfg.d_model
+        H = inner // ssm.head_dim
+        conv_dim = inner + 2 * NGROUPS * ssm.state_size
+        napps = hybrid.n_attn_apps(cfg)
+        return {
+            "conv": _sd((cfg.num_layers, B, CONV_W - 1, conv_dim), jnp.float32),
+            "ssm": _sd((cfg.num_layers, B, H, ssm.state_size, ssm.head_dim), jnp.float32),
+            "k": _sd((napps, B, S, cfg.num_kv_heads, hd), cfg.cache_dtype or cfg.dtype),
+            "v": _sd((napps, B, S, cfg.num_kv_heads, hd), cfg.cache_dtype or cfg.dtype),
+        }
+    cdt = cfg.cache_dtype or cfg.dtype
+    if cfg.family in ("audio", "encdec"):
+        L = cfg.num_layers
+        # SWA-like bound is not applicable; cross K/V at encoder length = S
+        return {
+            "k": _sd((L, B, S, cfg.num_kv_heads, hd), cdt),
+            "v": _sd((L, B, S, cfg.num_kv_heads, hd), cdt),
+            "ck": _sd((L, B, S, cfg.num_kv_heads, hd), cdt),
+            "cv": _sd((L, B, S, cfg.num_kv_heads, hd), cdt),
+        }
+    L = cfg.num_layers
+    S_eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    return {
+        "k": _sd((L, B, S_eff, cfg.num_kv_heads, hd), cdt),
+        "v": _sd((L, B, S_eff, cfg.num_kv_heads, hd), cdt),
+    }
+
+
+def params_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of params via eval_shape (no allocation)."""
+    bundle = build(cfg)
+    return jax.eval_shape(lambda: bundle.init(jax.random.key(0)))

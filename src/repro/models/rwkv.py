@@ -1,0 +1,238 @@
+"""RWKV6 (Finch) — attention-free, data-dependent per-channel decay.
+
+WKV6 recurrence per head (K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t @ S_{t-1} + ((r_t * u) . k_t) v_t
+Chunked-parallel implementation; every exponent is a *difference* of decay
+cumsums and therefore <= 0 (numerically safe without clamping tricks).
+SPION is inapplicable (no attention-score matrix) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as Lyr
+from repro.models.layers import _he
+
+LORA_R = 64
+
+
+def timemix_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    inner = H * hd
+    ks = jax.random.split(key, 8)
+    return {
+        "mix": jnp.full((4, d), 0.5, jnp.float32),  # r,k,v,w token-shift mixes
+        "w_r": _he(ks[0], (d, inner), d, dtype),
+        "w_k": _he(ks[1], (d, inner), d, dtype),
+        "w_v": _he(ks[2], (d, inner), d, dtype),
+        "w_g": _he(ks[3], (d, inner), d, dtype),
+        "out_proj": _he(ks[4], (inner, d), inner, dtype),
+        "w0": jnp.full((inner,), -6.0, jnp.float32),        # base log-log decay
+        "w_lora_a": _he(ks[5], (d, LORA_R), d, jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[6], (LORA_R, inner)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),  # bonus
+        "ln_x": Lyr.layernorm_init(inner, jnp.float32),
+    }
+
+
+def channelmix_init(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "mix": jnp.full((1, d), 0.5, jnp.float32),
+        "w_in": _he(ks[0], (d, ff), d, dtype),
+        "w_out": _he(ks[1], (ff, d), ff, dtype),
+    }
+
+
+def token_shift(x):
+    """previous token along seq (zero for t=0): (B,S,d) -> (B,S,d)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _mix(x, xs, m):
+    return x * m + xs * (1 - m)
+
+
+def wkv6_chunked(r, k, v, a, u, chunk, unroll=1):
+    """r,k: (B,S,H,K); v: (B,S,H,V); a = log decay (B,S,H,K) (<= 0);
+    u: (H,K) bonus. Returns y (B,S,H,V).
+
+    Chunk-PARALLEL form: all O(S*C*K) intra-chunk math is batched over the
+    chunk axis (real, countable HLO ops; fast compiles); only the tiny
+    O(n*H*K*V) state combine is a sequential scan.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, S)
+    n = S // C
+    rc = r.reshape(B, n, C, H, K)
+    kc = k.reshape(B, n, C, H, K)
+    vc = v.reshape(B, n, C, H, V)
+    ac = a.reshape(B, n, C, H, K).astype(jnp.float32)
+
+    cum = jnp.cumsum(ac, axis=2)                       # inclusive (B,n,C,H,K)
+    excl = cum - ac                                    # exclusive
+    last = cum[:, :, -1]                               # (B,n,H,K)
+
+    # parallel over chunks: per-chunk state delta + decay
+    k_dec = kc * jnp.exp(last[:, :, None] - cum).astype(kc.dtype)
+    delta = jnp.einsum("bnshk,bnshv->bnhkv", k_dec, vc).astype(jnp.float32)
+    decay = jnp.exp(last)                              # (B,n,H,K)
+
+    # sequential state combine (cheap): S_{j+1} = decay_j * S_j + delta_j
+    def comb(S_in, x):
+        d, dl = x
+        return S_in * d[..., None] + dl, S_in          # emit the INCOMING state
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    xs = (jnp.swapaxes(decay, 0, 1), jnp.swapaxes(delta, 0, 1))
+    _, S_in = jax.lax.scan(comb, S0, xs)
+    S_in = jnp.swapaxes(S_in, 0, 1)                    # (B,n,H,K,V)
+
+    # parallel: inter-chunk contribution
+    r_dec = rc * jnp.exp(excl).astype(rc.dtype)
+    y_inter = jnp.einsum("bnthk,bnhkv->bnthv", r_dec, S_in.astype(rc.dtype))
+
+    # parallel: intra-chunk M_ts = sum_k r_tk k_sk exp(excl_t - cum_s), s < t
+    D = excl[:, :, :, None] - cum[:, :, None, :]       # (B,n,C,C,H,K), <=0 s<t
+    mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[None, None, :, :, None, None]
+    expD = jnp.where(mask, jnp.exp(jnp.minimum(D, 0.0)), 0.0).astype(rc.dtype)
+    M = jnp.einsum("bnthk,bnshk,bntshk->bntsh", rc, kc, expD)
+    diag = jnp.einsum("bnthk,bnthk,hk->bnth", rc, kc, u.astype(rc.dtype))
+    y_intra = jnp.einsum("bntsh,bnshv->bnthv", M, vc) + diag[..., None] * vc
+
+    return (y_inter + y_intra).reshape(B, S, H, V)
+
+
+def timemix_apply(cfg, p, x, state=None, pos=None):
+    """x (B,S,d). state: None (train) or dict(prev (B,d), S (B,H,K,V)) for
+    decode (S=1). Returns (y, new_state)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    if state is None:
+        xs = token_shift(x)
+    else:
+        xs = state["prev"][:, None, :].astype(x.dtype)
+    m = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw = (_mix(x, xs, m[i]) for i in range(4))
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(_mix(x, xs, m[0]) @ p["w_g"].astype(x.dtype))
+    r = constrain(r, "batch", None, "model", None)
+    # data-dependent decay (lora), a = -exp(.) clamped to [-8, -1e-6]
+    wlog = p["w0"] + (jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"])
+    a = -jnp.exp(wlog).reshape(B, S, H, hd)
+    a = jnp.clip(a, -8.0, -1e-6)
+    u = p["u"]
+    if state is None:
+        y = wkv6_chunked(r, k, v, a, u, cfg.ssm.chunk, unroll=cfg.scan_unroll)
+        new_state = None
+    else:
+        S_in = state["S"]  # (B,H,K,V)
+        r1, k1, v1, a1 = r[:, 0], k[:, 0], v[:, 0], a[:, 0]
+        y = jnp.einsum("bhk,bhkv->bhv", r1.astype(jnp.float32), S_in) + \
+            jnp.einsum("bhk,hk,bhk,bhv->bhv", r1.astype(jnp.float32), u, k1.astype(jnp.float32), v1.astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)
+        S_new = S_in * jnp.exp(a1)[..., None] + \
+            jnp.einsum("bhk,bhv->bhkv", k1.astype(jnp.float32), v1.astype(jnp.float32))
+        new_state = {"prev": x[:, -1].astype(jnp.float32), "S": S_new}
+    y = y.reshape(B, S, H * hd)
+    y = Lyr.layernorm(p["ln_x"], y.astype(jnp.float32)).astype(x.dtype) * g
+    return y @ p["out_proj"].astype(x.dtype), new_state
+
+
+def channelmix_apply(cfg, p, x, state=None):
+    xs = token_shift(x) if state is None else state["prev"][:, None, :].astype(x.dtype)
+    xk = _mix(x, xs, p["mix"][0].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(xk @ p["w_in"].astype(x.dtype)))
+    h = constrain(h, "batch", None, "model")
+    y = h @ p["w_out"].astype(x.dtype)
+    new_state = None if state is None else {"prev": x[:, -1].astype(jnp.float32)}
+    return y, new_state
+
+
+def layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "tm_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "tm": timemix_init(ks[0], cfg, dtype),
+        "cm_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "cm": channelmix_init(ks[1], cfg, dtype),
+    }
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[0], cfg.num_layers)
+    return {
+        "tok_embed": Lyr.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "in_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "layers": jax.vmap(lambda k: layer_init(k, cfg, dtype))(lkeys),
+        "final_norm": Lyr.layernorm_init(cfg.d_model, jnp.float32),
+        "lm_head": Lyr.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+    }
+
+
+def forward(params, cfg, batch, *, spion=None, capture=None):
+    dtype = jnp.dtype(cfg.dtype)
+    h = Lyr.embed(params["tok_embed"], batch["tokens"], dtype)
+    h = Lyr.layernorm(params["in_norm"], h.astype(jnp.float32)).astype(dtype)
+    h = constrain(h, "batch", None, None)
+
+    def body(h, lp):
+        def run(h, lp):
+            y, _ = timemix_apply(cfg, lp["tm"], Lyr.layernorm(lp["tm_norm"], h.astype(jnp.float32)).astype(h.dtype))
+            h2 = h + y
+            y2, _ = channelmix_apply(cfg, lp["cm"], Lyr.layernorm(lp["cm_norm"], h2.astype(jnp.float32)).astype(h.dtype))
+            return h2 + y2
+        if cfg.remat:
+            run = jax.checkpoint(run, prevent_cse=False)
+        return run(h, lp), jnp.zeros(())
+
+    h, _ = jax.lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["lm_head"], h)
+    return constrain(logits, "batch", None, "model"), {}
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    """Recurrent state: O(1) in sequence length (the SSM long-context win)."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    L, B, d = cfg.num_layers, batch_size, cfg.d_model
+    return {
+        "tm_prev": jnp.zeros((L, B, d), jnp.float32),
+        "cm_prev": jnp.zeros((L, B, d), jnp.float32),
+        "S": jnp.zeros((L, B, H, hd, hd), jnp.float32),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    h = Lyr.layernorm(params["in_norm"], h.astype(jnp.float32)).astype(dtype)
+
+    def body(h, xs):
+        lp, tm_prev, cm_prev, S = xs
+        xin = Lyr.layernorm(lp["tm_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        y, st = timemix_apply(cfg, lp["tm"], xin, state={"prev": tm_prev, "S": S})
+        h = h + y
+        xin2 = Lyr.layernorm(lp["cm_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        y2, st2 = channelmix_apply(cfg, lp["cm"], xin2, state={"prev": cm_prev})
+        # note: token-shift states must hold the *inputs* to each mix
+        return h + y2, (xin[:, -1].astype(jnp.float32), xin2[:, -1].astype(jnp.float32), st["S"])
+
+    h, (tm_prev, cm_prev, S) = jax.lax.scan(
+        body, h, (params["layers"], cache["tm_prev"], cache["cm_prev"], cache["S"]),
+        unroll=cfg.scan_unroll)
+    h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["lm_head"], h)[:, 0]
+    return logits, {"tm_prev": tm_prev, "cm_prev": cm_prev, "S": S}

@@ -1,0 +1,187 @@
+"""Decoder/encoder transformer LM with scan-over-layers.
+
+Families served here: dense (qwen/mistral/command-r), moe (mixtral/arctic),
+vlm (internvl2 backbone + stub patch tokens), encoder (spion-lra).
+SPION hooks: `spion` (per-layer BCSR tables) switches self-attention to the
+block-sparse path; `capture` streams pooled conv scores for pattern
+generation during the dense phase.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_attention import BCSR, bcsr_attention
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import layers as Lyr
+from repro.models.moe import moe_apply, moe_init
+
+
+MAX_POS = 65_536  # learned-position table bound (largest non-RoPE shape)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": Lyr.norm_init(cfg, dtype=jnp.float32),
+        "attn": A.attn_init(ks[0], cfg, dtype=dtype),
+        "mlp_norm": Lyr.norm_init(cfg, dtype=jnp.float32),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[1], cfg, dtype=dtype)
+    else:
+        p["mlp"] = Lyr.mlp_init(ks[1], cfg, dtype=dtype)
+    return p
+
+
+def init(key, cfg):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    params: Dict[str, Any] = {
+        "tok_embed": Lyr.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: layer_init(k, cfg, dtype))(layer_keys),
+        "final_norm": Lyr.norm_init(cfg, dtype=jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Lyr.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype)
+    if not cfg.rope_theta:
+        params["pos_embed"] = {"w": (jax.random.normal(ks[3], (MAX_POS, cfg.d_model)) * 0.02).astype(dtype)}
+    return params
+
+
+def _self_attention(cfg, p, h, positions, spion_layer, capture):
+    """One layer's attention; returns (out, captured_or_zeros)."""
+    x = Lyr.norm(cfg, p["attn_norm"], h)
+    q, k, v = A.qkv(cfg, p["attn"], x, positions)
+    cap = jnp.zeros((), jnp.float32)
+    if capture is not None:
+        cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
+                                      capture["filt"], capture["block"])  # (pooled, frob)
+    if spion_layer is not None:
+        bcsr = BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
+                    spion_layer["block"], x.shape[1])
+        ctx = bcsr_attention(cfg, q, k, v, bcsr)
+    else:
+        pos1d = positions
+        ctx = A.dense_attention(cfg, q, k, v, pos1d, pos1d)
+    return A.attn_out(cfg, p["attn"], ctx), cap
+
+
+def _block(cfg, p, h, positions, spion_layer, capture):
+    attn_y, cap = _self_attention(cfg, p, h, positions, spion_layer, capture)
+    h = h + attn_y
+    x = Lyr.norm(cfg, p["mlp_norm"], h)
+    if cfg.moe is not None:
+        y, aux = moe_apply(cfg, p["moe"], x)
+        aux = {k_: v_.astype(jnp.float32) for k_, v_ in aux.items()}
+    else:
+        y = Lyr.mlp(cfg, p["mlp"], x)
+        aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    return h + y, cap, aux
+
+
+def _embed_inputs(cfg, params, batch, dtype):
+    tokens = batch["tokens"]
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    if cfg.num_patch_tokens and "patch_embeds" in batch:
+        h = jnp.concatenate([batch["patch_embeds"].astype(dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    if not cfg.rope_theta and "pos_embed" in params:
+        h = h + params["pos_embed"]["w"][:S].astype(dtype)
+    return h, positions
+
+
+def forward(params, cfg, batch, *, spion=None, capture=None):
+    """batch: {'tokens': (B,S') [, 'patch_embeds': (B,P,d)]} -> logits (B,S,V).
+
+    spion: None | {'col_idx': (Ly,nrb,K), 'nvalid': (Ly,nrb), 'block': int}
+    capture: None | {'filt': (F,), 'block': int} -> also returns
+             (Ly, S/B, S/B) pooled conv scores for pattern generation.
+    """
+    dtype = _dtype(cfg)
+    h, positions = _embed_inputs(cfg, params, batch, dtype)
+    h = constrain(h, "batch", "model" if cfg.act_shard == "seq" else None,
+                  "model" if cfg.act_shard == "d" else None)
+
+    def body(h, xs):
+        lp, sp = xs
+
+        def run(h, lp, sp):
+            return _block(cfg, lp, h, positions,
+                          None if sp is None else {**sp, "block": spion["block"]},
+                          capture)
+        if cfg.remat:
+            run = jax.checkpoint(run, prevent_cse=False)
+        h, cap, aux = run(h, lp, sp)
+        return h, (cap, aux)
+
+    if spion is not None:
+        sp_stacked = {"col_idx": spion["col_idx"], "nvalid": spion["nvalid"]}
+    else:
+        sp_stacked = None
+    h, (caps, auxs) = jax.lax.scan(body, h, (params["layers"], sp_stacked),
+                                   unroll=cfg.scan_unroll)
+
+    h = Lyr.norm(cfg, params["final_norm"], h)
+    head = params["lm_head" if "lm_head" in params else "tok_embed"]
+    logits = Lyr.unembed(head, h)
+    logits = constrain(logits, "batch", None, "model")
+    aux = {k: jnp.mean(v) for k, v in auxs.items()}
+    if capture is not None:
+        aux["captured"] = caps
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.cache_dtype or cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """tokens (B,1) at absolute position `pos` (int32 scalar).
+    Returns (logits (B,V), new cache)."""
+    dtype = _dtype(cfg)
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    if not cfg.rope_theta and "pos_embed" in params:
+        h = h + jax.lax.dynamic_slice_in_dim(params["pos_embed"]["w"], pos, 1, 0).astype(dtype)[None]
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    h = constrain(h, "batch", None, None)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        x = Lyr.norm(cfg, lp["attn_norm"], h)
+        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions.astype(jnp.int32))
+        cache_len = kc.shape[1]
+        slot = A.cache_slot(cfg, pos, cache_len) if cfg.sliding_window else pos
+        kpos = A.ring_kpos(pos, cache_len) if cfg.sliding_window else None
+        kc, vc = A.update_cache(kc, vc, k_new, v_new, slot)
+        ctx = A.decode_attention(cfg, q, kc, vc, pos, kpos=kpos)
+        h = h + A.attn_out(cfg, lp["attn"], ctx)
+        x = Lyr.norm(cfg, lp["mlp_norm"], h)
+        if cfg.moe is not None:
+            y, _ = moe_apply(cfg, lp["moe"], x)
+        else:
+            y = Lyr.mlp(cfg, lp["mlp"], x)
+        return h + y, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]),
+                               unroll=cfg.scan_unroll)
+    h = Lyr.norm(cfg, params["final_norm"], h)
+    head = params["lm_head" if "lm_head" in params else "tok_embed"]
+    logits = Lyr.unembed(head, h)[:, 0]
+    return constrain(logits, "batch", "model"), {"k": ks, "v": vs}

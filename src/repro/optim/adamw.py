@@ -1,0 +1,47 @@
+"""AdamW in pure JAX. Optimizer state is a pytree mirroring params; with
+ZeRO-1 the state is sharded over the data axes (distributed/sharding.py
+zero1_pspecs) — GSPMD inserts the gather on use.
+
+Master weights are fp32 regardless of the (bf16) compute params: `params`
+passed here are the fp32 masters; callers cast to cfg.dtype for the forward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    c1 = 1.0 - b1 ** cf
+    c2 = 1.0 - b2 ** cf
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        newp = p.astype(jnp.float32) - lr * (step + decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["mu"], state["nu"],
+                                  is_leaf=lambda x: isinstance(x, jax.Array))
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

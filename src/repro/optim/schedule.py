@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, peak, warmup_steps):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, *, peak, warmup_steps, total_steps, floor=0.1):
+    warm = linear_warmup(step, peak=peak, warmup_steps=warmup_steps)
+    frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, peak * cos)

@@ -1,0 +1,13 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+host device count (1 on CI); multi-device tests spawn subprocesses."""
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

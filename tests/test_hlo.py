@@ -1,0 +1,60 @@
+"""HLO collective-bytes parser + roofline term arithmetic."""
+import pytest
+
+from repro.launch.hlo import collective_stats, op_census, roofline_terms
+
+SAMPLE = """
+HloModule jit_step
+fused_computation {
+  p0 = bf16[128,256]{1,0} parameter(0)
+}
+ENTRY main {
+  %x = bf16[128,256]{1,0} parameter(0)
+  %y = f32[64]{0} parameter(1)
+  %ar = bf16[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[512,256]{1,0} all-gather(%x), dimensions={0}
+  %rs = f32[16]{0} reduce-scatter(%y), dimensions={0}
+  %cp = bf16[128,256]{1,0} collective-permute(%x), source_target_pairs={{0,1}}
+  %a2a = bf16[128,256]{1,0} all-to-all(%x), dimensions={0}
+  ROOT %out = bf16[128,256]{1,0} add(%ar, %cp)
+}
+"""
+
+
+def test_collective_stats_operand_sizes():
+    s = collective_stats(SAMPLE)
+    x_bytes = 128 * 256 * 2
+    y_bytes = 64 * 4
+    assert s["by_kind"]["all-reduce"] == x_bytes
+    assert s["by_kind"]["all-gather"] == x_bytes       # operand, not result
+    assert s["by_kind"]["reduce-scatter"] == y_bytes
+    assert s["by_kind"]["collective-permute"] == x_bytes
+    assert s["by_kind"]["all-to-all"] == x_bytes
+    assert s["total_bytes"] == 4 * x_bytes + y_bytes
+    assert s["count"]["all-reduce"] == 1
+
+
+def test_collective_stats_async_start_done_not_double_counted():
+    txt = """
+ENTRY main {
+  %x = bf16[8,8]{1,0} parameter(0)
+  %s = bf16[8,8]{1,0} all-gather-start(%x), dimensions={0}
+  %d = bf16[8,8]{1,0} all-gather-done(%s)
+}
+"""
+    s = collective_stats(txt)
+    assert s["count"]["all-gather"] == 1
+    assert s["by_kind"]["all-gather"] == 8 * 8 * 2
+
+
+def test_op_census():
+    c = op_census(SAMPLE)
+    assert c["all-reduce"] == 1 and c["all-gather"] == 1
+
+
+def test_roofline_terms():
+    t = roofline_terms(197e12, 819e9, 50e9, 1, peak_flops=197e12,
+                       hbm_bw=819e9, link_bw=50e9)
+    assert t["t_compute"] == pytest.approx(1.0)
+    assert t["t_memory"] == pytest.approx(1.0)
+    assert t["t_collective"] == pytest.approx(1.0)

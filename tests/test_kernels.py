@@ -1,0 +1,111 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps vs the
+ref.py pure-jnp oracles and vs the BCSR jnp path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sparse_attention import bcsr_attention, bcsr_from_blockmask
+from repro.kernels import ref
+from repro.kernels.block_sparse_attn import fused_block_sparse_attention
+from repro.kernels.ops import spion_attention_kernel
+from repro.kernels.sddmm import sddmm
+from repro.kernels.sparse_softmax import sparse_softmax
+from repro.kernels.spmm import spmm
+
+
+def _tables(rng, n, K_density=0.5):
+    mask = rng.random((n, n)) < K_density
+    np.fill_diagonal(mask, True)
+    b = bcsr_from_blockmask(mask, 0 or 1, None)  # placeholder
+    return mask
+
+
+def _bcsr(rng, n, block, density=0.5):
+    mask = rng.random((n, n)) < density
+    np.fill_diagonal(mask, True)
+    return bcsr_from_blockmask(mask, block)
+
+
+SWEEP = [
+    # (S, hd, block, dtype, causal, sw)
+    (128, 32, 32, jnp.float32, False, None),
+    (128, 32, 32, jnp.float32, True, None),
+    (256, 64, 64, jnp.float32, True, 96),
+    (128, 16, 32, jnp.bfloat16, True, None),
+    (64, 128, 32, jnp.float32, False, None),
+]
+
+
+@pytest.mark.parametrize("S,hd,block,dtype,causal,sw", SWEEP)
+def test_sddmm_vs_ref(S, hd, block, dtype, causal, sw, rng):
+    N = 2
+    q = jax.random.normal(jax.random.key(0), (N, S, hd), dtype)
+    k = jax.random.normal(jax.random.key(1), (N, S, hd), dtype)
+    b = _bcsr(rng, S // block, block)
+    col = jnp.maximum(b.col_idx, 0)
+    out = sddmm(q, k, col, b.nvalid, block=block, causal=causal,
+                sliding_window=sw, interpret=True)
+    want = ref.sddmm_ref(q, k, b.col_idx, block=block, causal=causal,
+                         sliding_window=sw)
+    # compare only at unmasked positions (both use -inf at masked)
+    fin = np.isfinite(np.asarray(want))
+    np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(want)[fin],
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-5)
+    assert np.all(np.isneginf(np.asarray(out)[~fin]))
+
+
+@pytest.mark.parametrize("S,hd,block,dtype,causal,sw", SWEEP)
+def test_softmax_spmm_vs_ref(S, hd, block, dtype, causal, sw, rng):
+    N = 2
+    q = jax.random.normal(jax.random.key(0), (N, S, hd), dtype)
+    k = jax.random.normal(jax.random.key(1), (N, S, hd), dtype)
+    v = jax.random.normal(jax.random.key(2), (N, S, hd), dtype)
+    b = _bcsr(rng, S // block, block)
+    col = jnp.maximum(b.col_idx, 0)
+    s = ref.sddmm_ref(q, k, b.col_idx, block=block, causal=causal, sliding_window=sw)
+    p = sparse_softmax(s, col, b.nvalid, block=block, seq_len=S, causal=causal,
+                       sliding_window=sw, interpret=True)
+    p_ref = ref.sparse_softmax_ref(s, b.col_idx, block=block, seq_len=S,
+                                   causal=causal, sliding_window=sw)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), atol=2e-6)
+    o = spmm(p, v, col, b.nvalid, block=block, interpret=True)
+    o_ref = ref.spmm_ref(p_ref, v, b.col_idx)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(o_ref, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+@pytest.mark.parametrize("S,hd,block,dtype,causal,sw", SWEEP)
+def test_fused_kernel_vs_ref(S, hd, block, dtype, causal, sw, rng):
+    N, G = 2, 2
+    q = jax.random.normal(jax.random.key(0), (N, G, S, hd), dtype)
+    k = jax.random.normal(jax.random.key(1), (N, S, hd), dtype)
+    v = jax.random.normal(jax.random.key(2), (N, S, hd), dtype)
+    b = _bcsr(rng, S // block, block)
+    col = jnp.maximum(b.col_idx, 0)
+    out = fused_block_sparse_attention(q, k, v, col, b.nvalid, block=block,
+                                       causal=causal, sliding_window=sw,
+                                       interpret=True)
+    want = jnp.stack([
+        ref.fused_ref(q[:, g], k, v, b.col_idx, block=block, causal=causal,
+                      sliding_window=sw) for g in range(G)], axis=1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=6e-2 if dtype == jnp.bfloat16 else 3e-5)
+
+
+@pytest.mark.parametrize("arch", ["spion-lra", "qwen2-7b", "mixtral-8x7b"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_kernel_wrapper_vs_bcsr_attention(arch, fused, rng):
+    cfg = get_config(arch)
+    if cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=96)
+    B, S, H, KV, hd, blk = 2, 256, 4, 2, 32, 64
+    q = jax.random.normal(jax.random.key(1), (B, S, H, hd))
+    k = jax.random.normal(jax.random.key(2), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.key(3), (B, S, KV, hd))
+    b = _bcsr(rng, S // blk, blk)
+    want = bcsr_attention(cfg, q, k, v, b)
+    out = spion_attention_kernel(cfg, q, k, v, b, fused=fused, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

@@ -1,0 +1,103 @@
+"""Pattern generation (paper Alg. 3/4): oracle equality + invariants."""
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pattern import (avg_pool, bigbird_pattern, density, diag_conv,
+                                diagonal_filter, flood_fill_iterative,
+                                flood_fill_recursive, generate_pattern,
+                                upsample, window_pattern)
+from repro.core.sparse_attention import bcsr_from_blockmask
+
+
+def _run_recursive(po, t):
+    n = po.shape[0]
+    fl = np.zeros((n, n), np.int8)
+    sys.setrecursionlimit(1_000_000)
+    for i in range(n):
+        flood_fill_recursive(po, 0, i, fl, t)
+    for j in range(n):
+        flood_fill_recursive(po, j, 0, fl, t)
+    return fl
+
+
+@given(st.integers(0, 10_000), st.integers(4, 24), st.floats(0.5, 0.99))
+def test_floodfill_iterative_matches_recursive_oracle(seed, n, q):
+    rng = np.random.default_rng(seed)
+    po = rng.random((n, n))
+    t = float(np.quantile(po, q))
+    fl_it = np.zeros((n, n), np.int8)
+    flood_fill_iterative(po, fl_it, t)
+    assert np.array_equal(fl_it, _run_recursive(po, t))
+
+
+@given(st.integers(0, 10_000), st.integers(4, 20))
+def test_floodfill_marks_only_above_threshold(seed, n):
+    rng = np.random.default_rng(seed)
+    po = rng.random((n, n))
+    t = float(np.quantile(po, 0.8))
+    fl = np.zeros((n, n), np.int8)
+    flood_fill_iterative(po, fl, t)
+    assert np.all(po[fl.astype(bool)] > t)
+
+
+@given(st.integers(0, 2_000), st.sampled_from(["c", "f", "cf"]),
+       st.booleans())
+def test_generate_pattern_invariants(seed, variant, causal):
+    rng = np.random.default_rng(seed)
+    L, B = 128, 16
+    a_s = rng.random((L, L))
+    pat = generate_pattern(a_s, variant=variant, conv_filter_size=7,
+                           block_size=B, alpha_quantile=0.9, causal=causal)
+    n = L // B
+    assert pat.shape == (n, n)
+    assert set(np.unique(pat)).issubset({0, 1})
+    assert np.all(np.diag(pat) == 1), "Alg.3 lines 9-10: diagonal forced"
+    if causal:
+        assert np.all(np.triu(pat, 1) == 0)
+
+
+def test_diag_conv_matches_eq3():
+    """conv_out(i,j) = sum_f A(i+f,j+f) * w_f, zero padded."""
+    rng = np.random.default_rng(0)
+    a = rng.random((16, 16))
+    w = diagonal_filter(5)
+    out = diag_conv(a, w)
+    i, j = 3, 7
+    expect = sum(w[f] * a[i + f, j + f] for f in range(5))
+    assert np.isclose(out[i, j], expect)
+    # zero padding at the edge
+    i = 14
+    expect = sum(w[f] * a[i + f, j + f] for f in range(2))
+    assert np.isclose(out[i, j], expect)
+
+
+def test_avgpool_and_upsample_roundtrip_shape():
+    rng = np.random.default_rng(0)
+    a = rng.random((64, 64))
+    p = avg_pool(a, 16)
+    assert p.shape == (4, 4)
+    u = upsample((p > p.mean()).astype(np.int8), 16)
+    assert u.shape == (64, 64)
+    assert np.array_equal(u[:16, :16], np.full((16, 16), u[0, 0]))
+
+
+def test_fixed_patterns():
+    m = bigbird_pattern(16, window=3, num_global=2, num_random=2)
+    assert np.all(np.diag(m) == 1)
+    assert np.all(m[:2, :] == 1) and np.all(m[:, :2] == 1)
+    w = window_pattern(16, window=3)
+    assert w[8, 8] and w[8, 7] and w[8, 9] and not w[8, 11]
+    assert 0 < density(w) < 0.3
+
+
+def test_bcsr_from_blockmask_padding():
+    mask = np.zeros((4, 4), bool)
+    mask[0, :3] = True
+    mask[2, 1] = True
+    b = bcsr_from_blockmask(mask, 8)
+    assert b.col_idx.shape == (4, 3)
+    assert int(b.nvalid[0]) == 3 and int(b.nvalid[2]) == 1
+    assert int(b.col_idx[2, 0]) == 1 and int(b.col_idx[2, 1]) == -1

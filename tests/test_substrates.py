@@ -1,0 +1,142 @@
+"""Optimizer, schedules, quantisation, checkpointing, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.fault import Heartbeat, StepSupervisor, StragglerMonitor
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.grad import dequantize_int8, quantize_int8
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_adamw_first_step_is_scaled_sign():
+    params = {"w": jnp.ones((3, 3))}
+    grads = {"w": jnp.full((3, 3), 0.5)}
+    st_ = adamw_init(params)
+    p2, st2 = adamw_update(params, grads, st_, lr=0.1, weight_decay=0.0)
+    # first Adam step with bias correction = lr * g/|g| (per element)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 0.1, atol=1e-4)
+    assert int(st2["count"]) == 1
+
+
+def test_adamw_no_decay_on_1d():
+    params = {"scale": jnp.ones((4,)), "w": jnp.ones((4, 4))}
+    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    p2, _ = adamw_update(params, grads, adamw_init(params), lr=0.1,
+                         weight_decay=0.5)
+    np.testing.assert_allclose(np.asarray(p2["scale"]), 1.0)       # no decay
+    assert float(p2["w"][0, 0]) < 1.0                              # decayed
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    _, norm2 = clip_by_global_norm(clipped, 1e9)
+    assert float(norm2) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedules():
+    assert float(linear_warmup(0, peak=1.0, warmup_steps=10)) == pytest.approx(0.1)
+    assert float(cosine_schedule(0, peak=1.0, warmup_steps=10, total_steps=100)) < 0.2
+    assert float(cosine_schedule(100, peak=1.0, warmup_steps=10, total_steps=100)) \
+        == pytest.approx(0.1, abs=1e-3)
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64))
+def test_quantize_roundtrip_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = quantize_int8(x)
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)))
+    amax = float(np.max(np.abs(np.asarray(x))))
+    assert err <= amax / 127.0 * 0.5 + 1e-6
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"count": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = _tree()
+    mgr.save(10, tree, extra={"phase": "sparse"})
+    got, step, extra = mgr.restore(target=tree)
+    assert step == 10 and extra["phase"] == "sparse"
+    np.testing.assert_allclose(np.asarray(got["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _tree())
+    # a torn checkpoint without DONE marker must be invisible
+    os.makedirs(tmp_path / "step_000000099")
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+# -- fault tolerance ------------------------------------------------------------
+
+def test_supervisor_restores_and_retries():
+    calls = {"restore": 0, "step": 0}
+
+    def restore():
+        calls["restore"] += 1
+
+    sup = StepSupervisor(restore, max_retries=3)
+
+    def flaky():
+        calls["step"] += 1
+        if calls["step"] < 3:
+            raise RuntimeError("simulated device failure")
+        return "ok"
+
+    assert sup.run(flaky) == "ok"
+    assert calls["restore"] == 2
+    assert sup.restarts == 2
+
+
+def test_supervisor_gives_up():
+    sup = StepSupervisor(lambda: None, max_retries=1)
+    with pytest.raises(RuntimeError):
+        sup.run(lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(warmup=5, z=3.0)
+    flagged = [mon.observe(1.0 + 0.01 * i) for i in range(20)]
+    assert not any(flagged)
+    assert mon.observe(10.0) is True
+    assert mon.observe(1.0) is False  # stats not poisoned
+
+
+def test_heartbeat_dead_host_detection(tmp_path):
+    p1, p2 = str(tmp_path / "h1"), str(tmp_path / "h2")
+    Heartbeat(p1, interval=0).beat(now=1000.0)
+    Heartbeat(p2, interval=0).beat(now=2000.0)
+    dead = Heartbeat.dead_hosts([p1, p2], timeout=500, now=2100.0)
+    assert dead == [p1]
