@@ -1,10 +1,18 @@
 """Fig. 6: breakdown of MHA operation times — dense GEMM/softmax/GEMM vs
-sparse SDDMM/sparse-softmax/SpMM.
+sparse SDDMM/sparse-softmax/SpMM — plus the `train_step` mode that times
+forward+backward now that the fused kernel has a sparse backward.
 
 CPU wall-times of the jitted jnp paths (the GPU numbers in the paper are
 hardware-specific; the *structure* — softmax dominating dense MHA, every
 sparse op beating its dense counterpart at 90%+ sparsity — is what this
 reproduces). Derived column reports op-count ratios from §4.4.
+
+`train_step_rows` is the honesty check the paper's headline demands: SPION
+claims cheaper *training*, so the number that matters is fwd+bwd, not fwd.
+It times (a) attention-level value_and_grad through the dense path, the jnp
+BCSR path, and — on TPU — the fused Pallas kernel with its custom-VJP
+backward, and (b) one full optimizer train step in the dense vs sparse
+phase via launch.steps.make_train_step.
 """
 from __future__ import annotations
 
@@ -76,3 +84,86 @@ def rows(out, L=1024, D=64, block=32, density=0.08):
     tot_s = t_sddmm + t_ssoft + t_spmm
     out("mha.total_speedup", round(tot_d / tot_s, 2),
         f"density={density} dense={tot_d:.0f}us sparse={tot_s:.0f}us")
+
+
+def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
+    """fwd+bwd timings: the training-speed claim, not the inference one."""
+    import dataclasses
+
+    from repro.core.sparse_attention import bcsr_attention
+    from repro.kernels.block_sparse_attn import fused_block_sparse_attention
+    from repro.launch.steps import make_train_step, spion_dryrun_tables
+    from repro.models.registry import build
+    from repro.optim import adamw_init
+
+    if smoke:
+        L, D = 128, 16
+    B, H, KV = 2, 2, 2
+    cfg = get_config("spion-lra").reduced().replace(
+        num_heads=H, num_kv_heads=KV, head_dim=D, causal=False)
+    cfg = cfg.replace(spion=dataclasses.replace(cfg.spion, block_size=block))
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (B, L, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, KV, D))
+    n = L // block
+    rng = np.random.default_rng(0)
+    mask = rng.random((n, n)) < density
+    np.fill_diagonal(mask, True)
+    bcsr = bcsr_from_blockmask(mask, block)
+    pos = jnp.arange(L)
+
+    from repro.models import attention as A
+
+    def dense_loss(q, k, v):
+        return jnp.sum(A.dense_attention(cfg, q, k, v, pos, pos) ** 2)
+
+    def sparse_jnp_loss(q, k, v):
+        return jnp.sum(bcsr_attention(cfg, q, k, v, bcsr) ** 2)
+
+    t_dense = _time(jax.jit(jax.value_and_grad(dense_loss, argnums=(0, 1, 2))),
+                    q, k, v)
+    t_sparse = _time(jax.jit(jax.value_and_grad(sparse_jnp_loss, argnums=(0, 1, 2))),
+                     q, k, v)
+    out("train_step.attn_dense_fwdbwd_us", round(t_dense, 1), "")
+    out("train_step.attn_sparse_jnp_fwdbwd_us", round(t_sparse, 1),
+        f"speedup={t_dense / t_sparse:.2f}x density={density}")
+
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ops import _split_heads
+        col = jnp.maximum(bcsr.col_idx, 0)
+        qh, kh, vh, _ = _split_heads(q, k, v)
+
+        def fused_loss(q, k, v):
+            o = fused_block_sparse_attention(q, k, v, col, bcsr.nvalid,
+                                             block=block, causal=cfg.causal)
+            return jnp.sum(o ** 2)
+
+        t_fused = _time(jax.jit(jax.value_and_grad(fused_loss, argnums=(0, 1, 2))),
+                        qh, kh, vh)
+        out("train_step.attn_sparse_fused_fwdbwd_us", round(t_fused, 1),
+            f"speedup={t_dense / t_fused:.2f}x (custom VJP Pallas bwd)")
+    else:
+        out("train_step.attn_sparse_fused_fwdbwd_us", 0,
+            "skipped: non-TPU backend runs the Pallas interpreter")
+
+    # full optimizer step: dense phase vs sparse phase (jnp kernel — the
+    # phase switch itself is what's being costed on CPU)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.key(1))
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.ndim >= 2 else x, params)
+    opt = adamw_init(params)
+    raw = rng.integers(0, cfg.vocab_size, (B, L + 1))
+    batch = {"tokens": jnp.asarray(raw[:, :-1]), "labels": jnp.asarray(raw[:, 1:])}
+    tables = spion_dryrun_tables(cfg, L)
+    dense_step = jax.jit(make_train_step(cfg))
+    sparse_step = jax.jit(make_train_step(cfg, spion=True, sparse_kernel="jnp"))
+    reps = 2 if smoke else 5
+    td = _time(lambda p, o, b: dense_step(p, o, b, jnp.int32(0))[2]["loss"],
+               params, opt, batch, reps=reps)
+    ts = _time(lambda p, o, b: sparse_step(p, o, b, jnp.int32(0), tables)[2]["loss"],
+               params, opt, batch, reps=reps)
+    out("train_step.model_dense_us", round(td, 1), "")
+    out("train_step.model_sparse_us", round(ts, 1),
+        f"speedup={td / ts:.2f}x seq={L} reduced-arch")

@@ -1,33 +1,109 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract.
+Prints ``name,us_per_call,derived`` CSV per the harness contract, and
+appends every run's rows to a ``BENCH_*.json`` trajectory file (a JSON list
+of {argv, smoke, unix_time, rows} entries) so successive runs/PRs build a
+perf history that CI uploads as an artifact.
 
   opcount          §4.4 exact op-count identities (Table-in-text)
   mha_breakdown    Fig. 6 dense vs sparse MHA op times
+  train_step       fwd+bwd (training) timings through the differentiable
+                   fused kernel path — the paper's actual headline claim
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
   roofline         §Roofline table from the dry-run artifacts
+
+``--smoke`` runs a fast subset at reduced sizes (CI); ``--only NAME`` (or a
+bare positional NAME, back-compat) selects one module.
 """
 from __future__ import annotations
 
+import argparse
+import functools
+import json
+import os
 import sys
+import time
 import traceback
+from types import SimpleNamespace
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    # `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+    # sys.path; make the script runnable from anywhere, installed or not
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
-def main() -> None:
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("name", nargs="?", default=None,
+                    help="run only this module (back-compat positional)")
+    ap.add_argument("--only", default=None, help="run only this module")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset at reduced sizes (CI smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="trajectory file to append to "
+                         "(default: BENCH_smoke.json under --smoke, else "
+                         "BENCH_trajectory.json, in the repo root)")
+    return ap.parse_args(argv)
+
+
+def _mods(smoke):
     from benchmarks import (accuracy_proxy, memory_footprint, mha_breakdown,
                             opcount, roofline, sparsity_ratio)
-    mods = [("opcount", opcount), ("mha_breakdown", mha_breakdown),
-            ("sparsity_ratio", sparsity_ratio),
+    train_step = SimpleNamespace(
+        rows=functools.partial(mha_breakdown.train_step_rows, smoke=smoke))
+    if smoke:
+        breakdown = SimpleNamespace(
+            rows=functools.partial(mha_breakdown.rows, L=256))
+        return [("opcount", opcount), ("mha_breakdown", breakdown),
+                ("train_step", train_step)]
+    return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
+            ("train_step", train_step), ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),
             ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+
+def _append_trajectory(path, entry):
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+            if not isinstance(hist, list):
+                hist = [hist]
+        except (json.JSONDecodeError, OSError):
+            # never silently overwrite accumulated history: keep the corrupt
+            # file aside and start a fresh trajectory
+            bak = path + ".bak"
+            os.replace(path, bak)
+            print(f"# warning: unreadable trajectory moved to {bak}",
+                  file=sys.stderr)
+    hist.append(entry)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1)
+
+
+def main(argv=None) -> None:
+    args = _parse_args(sys.argv[1:] if argv is None else argv)
+    only = args.only or args.name
+    rows = []
     print("name,us_per_call,derived")
 
     def out(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
+        rows.append({"name": name, "value": value, "derived": derived})
 
+    mods = _mods(args.smoke)
+    if only and only not in [n for n, _ in mods]:
+        have = ", ".join(n for n, _ in mods)
+        print(f"error: unknown module {only!r}"
+              + (" in --smoke mode" if args.smoke else "")
+              + f"; have: {have}", file=sys.stderr)
+        sys.exit(2)
     for name, mod in mods:
         if only and name != only:
             continue
@@ -36,6 +112,18 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc(file=sys.stderr)
             out(f"{name}.ERROR", 0, str(e)[:120])
+
+    if only and not args.json:
+        # partial runs are debugging aids; appending their incomplete row
+        # sets would pollute the perf history (pass --json to force)
+        print("# partial run (--only): trajectory not appended", file=sys.stderr)
+        return
+    default_json = "BENCH_smoke.json" if args.smoke else "BENCH_trajectory.json"
+    path = args.json or os.path.join(_ROOT, default_json)
+    _append_trajectory(path, {"argv": sys.argv[1:] if argv is None else argv,
+                              "smoke": bool(args.smoke),
+                              "unix_time": time.time(), "rows": rows})
+    print(f"# trajectory appended -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -70,6 +70,11 @@ class SpionConfig:
     # kernel-side: max active column-blocks per row-block (padded BCSR width).
     # None -> derived from the generated pattern at transition time.
     max_blocks_per_row: Optional[int] = None
+    # sparse-phase attention implementation: "auto" picks the fused
+    # differentiable Pallas kernel on TPU and the pure-jnp BCSR path
+    # elsewhere; "fused" / "jnp" force one (fused on CPU runs the Pallas
+    # interpreter — correct but slow, used by the gradient tests).
+    kernel: str = "auto"
 
 
 @dataclass(frozen=True)

@@ -44,6 +44,39 @@ def bcsr_from_blockmask(mask: np.ndarray, block: int, max_k: int | None = None) 
                 block, nrb * block)
 
 
+def bcsr_transpose(col_idx, nvalid, ncb: int | None = None,
+                   max_k: int | None = None):
+    """Transpose a padded-BCSR table: (col_idx (nrb, K), nvalid (nrb,)) ->
+    (row_idx (ncb, KT), nvalid_t (ncb,)).
+
+    `row_idx[c]` lists, ascending, the row-blocks whose active set contains
+    column-block `c`; entries past `nvalid_t[c]` are arbitrary in-range row
+    ids (clamped padding, same convention the kernels use for `col_idx`).
+
+    Pure jnp (gather/scatter/argsort) so it runs under jit on traced tables —
+    the sparse-phase tables are step *inputs*, not compile-time constants
+    (DESIGN.md §8). `max_k` bounds the padded width KT; it must be static.
+    The default KT = nrb is the only always-safe bound: a vertical stripe
+    (global-attention column) appears in every row-block.
+    """
+    col_idx = jnp.asarray(col_idx, jnp.int32)
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    nrb, K = col_idx.shape
+    ncb = int(ncb) if ncb is not None else nrb
+    valid = jnp.arange(K)[None, :] < nvalid[:, None]              # (nrb, K)
+    # scatter into a dense block mask; invalid entries land in a spill column
+    colc = jnp.where(valid, jnp.clip(col_idx, 0, ncb - 1), ncb)
+    mask = jnp.zeros((nrb, ncb + 1), bool)
+    mask = mask.at[jnp.arange(nrb)[:, None], colc].set(True)[:, :ncb]
+    maskT = mask.T                                                # (ncb, nrb)
+    KT = int(max_k) if max_k is not None else nrb
+    # active rows first (ascending), inactive pushed to the back
+    keys = jnp.where(maskT, jnp.arange(nrb)[None, :], nrb)
+    row_idx = jnp.argsort(keys, axis=1)[:, :KT].astype(jnp.int32)
+    nvalid_t = jnp.minimum(maskT.sum(axis=1), KT).astype(jnp.int32)
+    return row_idx, nvalid_t
+
+
 def full_bcsr(seq_len: int, block: int) -> BCSR:
     """All-blocks-active BCSR (sparse path must equal dense attention)."""
     nrb = seq_len // block

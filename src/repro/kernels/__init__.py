@@ -2,7 +2,10 @@
 
 sddmm / sparse_softmax / spmm: the paper-faithful 3-kernel pipeline
 (cusparseSDDMM / warp softmax / cusparseSpMM adapted to BCSR + MXU tiles).
-block_sparse_attn: beyond-paper fused flash-style kernel.
-ops: jit'd public wrappers; ref: pure-jnp oracles.
+block_sparse_attn: beyond-paper fused flash-style kernel, differentiable
+(custom VJP with Pallas dQ and dK/dV backward kernels).
+ops: jit'd public wrappers; ref: pure-jnp oracles; dispatch: platform knobs
+(interpret=None resolves to compiled-on-TPU / interpreter elsewhere).
 """
+from repro.kernels.dispatch import default_interpret  # noqa: F401
 from repro.kernels.ops import spion_attention_kernel  # noqa: F401

@@ -1,17 +1,34 @@
-"""Fused block-sparse flash attention — the BEYOND-PAPER kernel.
+"""Fused block-sparse flash attention — the BEYOND-PAPER kernel, now
+differentiable end-to-end (jax.custom_vjp with Pallas forward AND backward).
 
-One Pallas kernel replaces the paper's SDDMM -> sparse softmax -> SpMM
+Forward: one kernel replaces the paper's SDDMM -> sparse softmax -> SpMM
 pipeline: for each (batch*kv-head, q-head-in-group, row-block), the K active
 KV tiles stream through VMEM with running (max, sum, acc) flash statistics.
 S^r and S^s never touch HBM — this is the TPU-native realisation of the
 paper's data-locality argument (DESIGN.md §2), and it removes the
-O(nnz * B^2) intermediate traffic the faithful pipeline pays.
+O(nnz * B^2) intermediate traffic the faithful pipeline pays. The sparse
+softmax zero-correction (Alg. 6 line 15) is applied to the final denominator,
+so the kernel is bit-compatible (up to fp assoc.) with the 3-kernel path.
+Alongside the context it emits per-row log-sum-exp residuals
+lse = m + log(denom); with the correction folded into denom, the softmax
+probabilities reconstruct exactly as p = exp(s - lse) in the backward.
 
-The sparse-softmax zero-correction (Alg. 6 line 15) is applied to the final
-denominator, so the fused kernel is bit-compatible (up to fp assoc.) with
-the 3-kernel path.
+Backward (flash-attention-2 style, sparse):
+  dQ    — same (N, G, nrb, K) row-block grid as the forward, streaming the
+          active KV tiles and accumulating dq = scale * sum_c ds_c K_c.
+  dK/dV — column-block grid over the TRANSPOSED BCSR tables
+          (core.sparse_attention.bcsr_transpose): for column-block c, stream
+          the row-blocks that reference it (and the G query heads sharing
+          the kv head, innermost so the output tile is revisited
+          consecutively) and accumulate dv += p^T dO, dk += scale * ds^T Q.
+Both recompute p from (q, k, lse); ds = p * (dp - delta) with
+delta = rowsum(dO * O). The Alg. 6 phantom positions carry constant score 0
+and no value, so they alter only the forward normaliser — the standard
+softmax cotangent identity still holds on the active pattern and gradients
+match the dense reference there (tests/test_kernels.py).
 
-Grid: (N, G, nrb, K)  — K innermost/sequential; scratch in VMEM.
+Grids: fwd/dQ (N, G, nrb, K); dK/dV (N, ncb, KT, G) — innermost dims
+sequential; accumulators in VMEM scratch.
 """
 from __future__ import annotations
 
@@ -23,12 +40,31 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.sparse_attention import bcsr_transpose
+from repro.kernels.dispatch import default_interpret
+
 NEG = -1e30
 
 
-def _kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, block, hd, K, seq_len, scale,
-            causal, sliding_window):
+def _tile_mask(r, col, block, causal, sliding_window):
+    """(block, block) validity of the (row-block r, col-block col) tile."""
+    qpos = r * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    kpos = col * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    ok = jnp.ones((block, block), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if sliding_window is not None:
+        ok &= (qpos - kpos) < sliding_window
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_ref, l_ref, acc_ref, *, block, hd, K, seq_len, scale,
+                causal, sliding_window):
     r = pl.program_id(2)
     c = pl.program_id(3)
 
@@ -44,14 +80,7 @@ def _kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref,
         k = k_ref[0].astype(jnp.float32)         # (B, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        col = col_ref[r, c]
-        qpos = r * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
-        kpos = col * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
-        ok = jnp.ones((block, block), bool)
-        if causal:
-            ok &= qpos >= kpos
-        if sliding_window is not None:
-            ok &= (qpos - kpos) < sliding_window
+        ok = _tile_mask(r, col_ref[r, c], block, causal, sliding_window)
         s = jnp.where(ok, s, NEG)
 
         m_prev = m_ref[:, 0]
@@ -81,31 +110,25 @@ def _kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref,
         stored = jnp.zeros((block,), jnp.float32)
 
         def count(i, acc):
-            col = col_ref[r, i]
-            qpos = rows[:, None]
-            kpos = col * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
-            ok = jnp.full((block, block), i < nvalid_ref[r])
-            if causal:
-                ok &= qpos >= kpos
-            if sliding_window is not None:
-                ok &= (qpos - kpos) < sliding_window
+            ok = _tile_mask(r, col_ref[r, i], block, causal, sliding_window)
+            ok &= jnp.full((block, block), i < nvalid_ref[r])
             return acc + jnp.sum(ok.astype(jnp.float32), -1)
 
         stored = jax.lax.fori_loop(0, K, count, stored)
         denom = l + jnp.maximum(rt - stored, 0.0) * jnp.exp(-m)
-        denom = jnp.where(denom == 0.0, 1.0, denom)
-        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        safe = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        # rows with truly empty denominators get lse=+inf -> p = 0 in bwd
+        lse_ref[0, 0] = jnp.where(denom > 0.0, m + jnp.log(safe), jnp.inf)
 
 
-def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
-                                 causal=False, sliding_window=None,
-                                 interpret=True):
-    """q (N, G, S, hd) — G query heads share each kv head; k, v (N, S, hd);
-    col_idx (nrb, K) clamped, nvalid (nrb,). Returns (N, G, S, hd)."""
+def _fused_forward(q, k, v, col_idx, nvalid, *, block, causal, sliding_window,
+                   interpret):
+    """Returns (o (N, G, S, hd), lse (N, G, S) fp32)."""
     N, G, S, hd = q.shape
     nrb, K = col_idx.shape
     scale = 1.0 / np.sqrt(hd)
-    kern = functools.partial(_kernel, block=block, hd=hd, K=K, seq_len=S,
+    kern = functools.partial(_fwd_kernel, block=block, hd=hd, K=K, seq_len=S,
                              scale=scale, causal=causal,
                              sliding_window=sliding_window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -116,8 +139,10 @@ def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
             pl.BlockSpec((1, block, hd), lambda n, g, r, c, col, nv: (n, col[r, c], 0)),
             pl.BlockSpec((1, block, hd), lambda n, g, r, c, col, nv: (n, col[r, c], 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block, hd),
-                               lambda n, g, r, c, col, nv: (n, g, r, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, block, hd), lambda n, g, r, c, col, nv: (n, g, r, 0)),
+            pl.BlockSpec((1, 1, block), lambda n, g, r, c, col, nv: (n, g, r)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block, 1), jnp.float32),    # running max
             pltpu.VMEM((block, 1), jnp.float32),    # running sum
@@ -127,6 +152,203 @@ def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((N, G, S, hd), q.dtype),
+        out_shape=[jax.ShapeDtypeStruct((N, G, S, hd), q.dtype),
+                   jax.ShapeDtypeStruct((N, G, S), jnp.float32)],
         interpret=interpret,
     )(col_idx, nvalid, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# backward: dQ  (row-block grid, streams active KV tiles — forward's twin)
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+               delta_ref, dq_ref, acc_ref, *, block, K, scale, causal,
+               sliding_window):
+    r = pl.program_id(2)
+    c = pl.program_id(3)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(c < nvalid_ref[r])
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)       # (B, hd)
+        k = k_ref[0].astype(jnp.float32)          # (B, hd)
+        v = v_ref[0].astype(jnp.float32)          # (B, hd)
+        do = do_ref[0, 0].astype(jnp.float32)     # (B, hd)
+        lse = lse_ref[0, 0]                       # (B,)
+        delta = delta_ref[0, 0]                   # (B,)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ok = _tile_mask(r, col_ref[r, c], block, causal, sliding_window)
+        p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    @pl.when(c == K - 1)
+    def _finish():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, *, block, causal,
+              sliding_window, interpret):
+    N, G, S, hd = q.shape
+    nrb, K = col_idx.shape
+    scale = 1.0 / np.sqrt(hd)
+    kern = functools.partial(_dq_kernel, block=block, K=K, scale=scale,
+                             causal=causal, sliding_window=sliding_window)
+    qspec = pl.BlockSpec((1, 1, block, hd), lambda n, g, r, c, col, nv: (n, g, r, 0))
+    kvspec = pl.BlockSpec((1, block, hd), lambda n, g, r, c, col, nv: (n, col[r, c], 0))
+    rowspec = pl.BlockSpec((1, 1, block), lambda n, g, r, c, col, nv: (n, g, r))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, G, nrb, K),
+        in_specs=[qspec, kvspec, kvspec, qspec, rowspec, rowspec],
+        out_specs=qspec,
+        scratch_shapes=[pltpu.VMEM((block, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, G, S, hd), jnp.float32),
+        interpret=interpret,
+    )(col_idx, nvalid, q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# backward: dK/dV  (column-block grid over the transposed BCSR tables)
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(row_ref, nvt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, block, KT, G,
+                scale, causal, sliding_window):
+    c = pl.program_id(1)
+    t = pl.program_id(2)
+    g = pl.program_id(3)
+
+    @pl.when((t == 0) & (g == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when(t < nvt_ref[c])
+    def _step():
+        r = row_ref[c, t]
+        q = q_ref[0, 0].astype(jnp.float32)       # (B, hd) rows of block r
+        k = k_ref[0].astype(jnp.float32)          # (B, hd) column block c
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ok = _tile_mask(r, c, block, causal, sliding_window)
+        p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        # contract the q-row axis: dv_c += p^T dO_r ; dk_c += scale ds^T Q_r
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    @pl.when((t == KT - 1) & (g == G - 1))
+    def _finish():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t, *, block, causal,
+               sliding_window, interpret):
+    N, G, S, hd = q.shape
+    ncb, KT = row_idx.shape
+    scale = 1.0 / np.sqrt(hd)
+    kern = functools.partial(_dkv_kernel, block=block, KT=KT, G=G, scale=scale,
+                             causal=causal, sliding_window=sliding_window)
+    qspec = pl.BlockSpec((1, 1, block, hd),
+                         lambda n, c, t, g, row, nvt: (n, g, row[c, t], 0))
+    colspec = pl.BlockSpec((1, block, hd), lambda n, c, t, g, row, nvt: (n, c, 0))
+    rowspec = pl.BlockSpec((1, 1, block),
+                           lambda n, c, t, g, row, nvt: (n, g, row[c, t]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        # g innermost so every revisit of the (n, c) output tile is consecutive
+        grid=(N, ncb, KT, G),
+        in_specs=[qspec, colspec, colspec, qspec, rowspec, rowspec],
+        out_specs=[colspec, colspec],
+        scratch_shapes=[pltpu.VMEM((block, hd), jnp.float32),
+                        pltpu.VMEM((block, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((N, S, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((N, S, hd), jnp.float32)],
+        interpret=interpret,
+    )(row_idx, nvalid_t, q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP assembly
+# ---------------------------------------------------------------------------
+
+def _int_zero(x):
+    """float0 cotangent for integer-dtype primal inputs (the BCSR tables)."""
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_op(block, causal, sliding_window, interpret):
+    """One differentiable fused-attention op per static config (cached so the
+    custom_vjp identity is stable across traces)."""
+    fwd_ = functools.partial(_fused_forward, block=block, causal=causal,
+                             sliding_window=sliding_window, interpret=interpret)
+
+    @jax.custom_vjp
+    def op(q, k, v, col_idx, nvalid):
+        return fwd_(q, k, v, col_idx, nvalid)[0]
+
+    def op_fwd(q, k, v, col_idx, nvalid):
+        o, lse = fwd_(q, k, v, col_idx, nvalid)
+        return o, (q, k, v, col_idx, nvalid, o, lse)
+
+    def op_bwd(res, do):
+        q, k, v, col_idx, nvalid, o, lse = res
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+        dq = _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, block=block,
+                       causal=causal, sliding_window=sliding_window,
+                       interpret=interpret)
+        ncb = k.shape[1] // block
+        row_idx, nvalid_t = bcsr_transpose(col_idx, nvalid, ncb=ncb)
+        dk, dv = _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t,
+                            block=block, causal=causal,
+                            sliding_window=sliding_window, interpret=interpret)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                _int_zero(col_idx), _int_zero(nvalid))
+
+    op.defvjp(op_fwd, op_bwd)
+    return op
+
+
+def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
+                                 causal=False, sliding_window=None,
+                                 interpret=None):
+    """q (N, G, S, hd) — G query heads share each kv head; k, v (N, S, hd);
+    col_idx (nrb, K) clamped, nvalid (nrb,). Returns (N, G, S, hd).
+
+    Differentiable: jax.grad flows through Pallas dQ / dK/dV kernels (dK/dV
+    sum over the G query heads of each kv head). `interpret=None` resolves
+    from the platform (compiled on TPU, interpreter elsewhere).
+    """
+    op = _fused_op(int(block), bool(causal),
+                   None if sliding_window is None else int(sliding_window),
+                   default_interpret(interpret))
+    return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32))

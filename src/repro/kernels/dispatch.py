@@ -1,0 +1,24 @@
+"""Platform-aware kernel dispatch knobs.
+
+`interpret=None` everywhere in this package means "resolve from the
+platform": Pallas kernels compile through Mosaic on TPU and fall back to the
+pure-Python interpreter elsewhere (CPU CI, dev laptops), so the same call
+sites run unchanged on both. Pass an explicit bool to override.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=1)
+def _platform_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def default_interpret(interpret=None) -> bool:
+    """Resolve a tri-state interpret flag (None -> platform default)."""
+    if interpret is None:
+        return _platform_interpret()
+    return bool(interpret)

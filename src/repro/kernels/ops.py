@@ -5,8 +5,13 @@ bcsr_attention with use_pallas semantics: handles GQA head grouping, BCSR
 table clamping, and dispatches either the paper-faithful 3-kernel pipeline
 or the fused flash-style kernel.
 
-interpret=True executes the kernel bodies in Python on CPU (CI); on a real
-TPU runtime pass interpret=False.
+The fused path is differentiable (custom VJP with Pallas backward kernels,
+see block_sparse_attn.py) — it is the path the sparse training phase runs
+through. The 3-kernel pipeline stays forward-only (it exists to reproduce
+the paper's Fig. 6 breakdown, not to train).
+
+interpret=None resolves from the platform: compiled on TPU, Pallas
+interpreter on CPU (CI) — the same call sites work on both.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.block_sparse_attn import fused_block_sparse_attention
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.sddmm import sddmm
 from repro.kernels.sparse_softmax import sparse_softmax
 from repro.kernels.spmm import spmm
@@ -65,8 +71,9 @@ def _dispatch(q, k, v, col, nvalid, *, cfg, block, fused, interpret):
     return _merge_heads(o.reshape(B * KV, G, S, hd), dims)
 
 
-def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=True):
-    """Pallas-kernel counterpart of core.sparse_attention.bcsr_attention."""
+def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None):
+    """Pallas-kernel counterpart of core.sparse_attention.bcsr_attention.
+    With fused=True the result is differentiable (sparse backward kernels)."""
     col, nvalid = _prep_tables(bcsr)
     return _dispatch(q, k, v, col, nvalid, cfg=cfg, block=bcsr.block,
-                     fused=fused, interpret=interpret)
+                     fused=fused, interpret=default_interpret(interpret))

@@ -19,6 +19,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import default_interpret
+
 
 def _kernel(col_ref, nvalid_ref, q_ref, k_ref, o_ref, *, block, scale,
             causal, sliding_window):
@@ -40,9 +42,11 @@ def _kernel(col_ref, nvalid_ref, q_ref, k_ref, o_ref, *, block, scale,
 
 
 def sddmm(q, k, col_idx, nvalid, *, block, causal=False, sliding_window=None,
-          interpret=True):
+          interpret=None):
     """q, k: (N, S, hd); col_idx (nrb, K) int32 (clamped >= 0);
-    nvalid (nrb,) int32. Returns s_blocks (N, nrb, K, block, block) fp32."""
+    nvalid (nrb,) int32. Returns s_blocks (N, nrb, K, block, block) fp32.
+    interpret=None resolves from the platform (compiled on TPU)."""
+    interpret = default_interpret(interpret)
     N, S, hd = q.shape
     nrb, K = col_idx.shape
     scale = 1.0 / np.sqrt(hd)

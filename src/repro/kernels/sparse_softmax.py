@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import default_interpret
+
 
 def _kernel(col_ref, nvalid_ref, s_ref, o_ref, *, block, K, seq_len,
             causal, sliding_window):
@@ -41,8 +43,10 @@ def _kernel(col_ref, nvalid_ref, s_ref, o_ref, *, block, K, seq_len,
 
 
 def sparse_softmax(s_blocks, col_idx, nvalid, *, block, seq_len, causal=False,
-                   sliding_window=None, interpret=True):
-    """s_blocks (N, nrb, K, B, B) fp32 (-inf masked) -> probs, same shape."""
+                   sliding_window=None, interpret=None):
+    """s_blocks (N, nrb, K, B, B) fp32 (-inf masked) -> probs, same shape.
+    interpret=None resolves from the platform (compiled on TPU)."""
+    interpret = default_interpret(interpret)
     N, nrb, K = s_blocks.shape[:3]
     kern = functools.partial(_kernel, block=block, K=K, seq_len=seq_len,
                              causal=causal, sliding_window=sliding_window)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import default_interpret
+
 
 def _kernel(col_ref, nvalid_ref, p_ref, v_ref, o_ref, *, block):
     r = pl.program_id(1)
@@ -32,8 +34,10 @@ def _kernel(col_ref, nvalid_ref, p_ref, v_ref, o_ref, *, block):
         ).astype(o_ref.dtype)
 
 
-def spmm(p_blocks, v, col_idx, nvalid, *, block, interpret=True):
-    """p_blocks (N, nrb, K, B, B); v (N, S, hd) -> (N, S, hd) in v.dtype."""
+def spmm(p_blocks, v, col_idx, nvalid, *, block, interpret=None):
+    """p_blocks (N, nrb, K, B, B); v (N, S, hd) -> (N, S, hd) in v.dtype.
+    interpret=None resolves from the platform (compiled on TPU)."""
+    interpret = default_interpret(interpret)
     N, nrb, K = p_blocks.shape[:3]
     S, hd = v.shape[1], v.shape[2]
     kern = functools.partial(_kernel, block=block)

@@ -4,6 +4,7 @@ prefill_step and serve_step with full in/out shardings for a target mesh.
 from __future__ import annotations
 
 import functools
+from dataclasses import replace as dataclasses_replace
 from typing import Optional
 
 import jax
@@ -111,13 +112,21 @@ def spion_table_pspecs(tables):
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
-                    total_steps=10_000, n_micro=1, block=None):
+                    total_steps=10_000, n_micro=1, block=None,
+                    sparse_kernel=None):
     """Returns f(params_f32, opt_state, batch, step[, tables]) ->
     (params, opt_state, metrics). `spion` adds a BCSR tables argument
     ({'col_idx','nvalid'} arrays; the block size is STATIC via `block` /
     cfg.spion.block_size — an int leaf would turn into a tracer under jit).
     n_micro > 1 scans microbatches with gradient accumulation (activation
-    memory scales ~1/n_micro; the standard large-scale fit knob)."""
+    memory scales ~1/n_micro; the standard large-scale fit knob).
+
+    `sparse_kernel` overrides cfg.spion.kernel ("auto" | "jnp" | "fused"):
+    the sparse phase differentiates end-to-end through either path — the
+    fused Pallas kernel carries its own sparse backward (custom VJP)."""
+    if sparse_kernel is not None:
+        cfg = cfg.replace(spion=dataclasses_replace(cfg.spion,
+                                                    kernel=sparse_kernel))
     bundle = build(cfg)
     compute_dtype = jnp.dtype(cfg.dtype)
     static_block = block or cfg.spion.block_size

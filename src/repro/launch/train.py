@@ -46,7 +46,7 @@ def masters_of(params):
 class Trainer:
     def __init__(self, cfg, *, seq_len, batch, lr=3e-4, total_steps=1000,
                  ckpt_dir=None, mesh=None, seed=0, steps_per_epoch=50,
-                 data_iter=None, capture_batches=1):
+                 data_iter=None, capture_batches=1, sparse_kernel=None):
         self.cfg = cfg
         self.bundle = build(cfg)
         self.mesh = mesh
@@ -68,7 +68,8 @@ class Trainer:
         self._dense_step = jax.jit(make_train_step(
             cfg, spion=False, lr=lr, total_steps=total_steps), donate_argnums=(0, 1))
         self._sparse_step = jax.jit(make_train_step(
-            cfg, spion=True, lr=lr, total_steps=total_steps),
+            cfg, spion=True, lr=lr, total_steps=total_steps,
+            sparse_kernel=sparse_kernel),
             donate_argnums=(0, 1), static_argnames=())
         self._capture = jax.jit(
             lambda p, b, f, blk: self.bundle.forward(
@@ -165,12 +166,17 @@ def main():
     ap.add_argument("--seq-len", type=int, default=512)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--sparse-kernel", default=None,
+                    choices=["auto", "jnp", "fused"],
+                    help="sparse-phase attention impl (default: cfg.spion.kernel; "
+                         "auto = fused Pallas kernel on TPU, jnp path elsewhere)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     tr = Trainer(cfg, seq_len=args.seq_len, batch=args.batch,
-                 ckpt_dir=args.ckpt_dir, mesh=None)
+                 ckpt_dir=args.ckpt_dir, mesh=None,
+                 sparse_kernel=args.sparse_kernel)
     tr.maybe_resume()
     tr.train(args.steps)
 

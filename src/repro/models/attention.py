@@ -1,9 +1,8 @@
-"""Attention: dense GQA (train/prefill), KV-cache decode, and the SPION
+"""Attention: dense GQA (train/prefill), KV-cache decode, the SPION
 pattern-capture path that streams pooled diagonal-conv scores without ever
-materialising the L x L attention matrix (DESIGN.md §2).
-
-Sparse (BCSR) attention lives in repro.core.sparse_attention; this module is
-the dense-phase / baseline path and the serving path.
+materialising the L x L attention matrix (DESIGN.md §2), and the sparse-phase
+dispatch (`spion_sparse_attention`) that routes the BCSR tables either to the
+pure-jnp gather path or the fused differentiable Pallas kernel.
 """
 from __future__ import annotations
 
@@ -13,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sparse_attention import BCSR, bcsr_attention
 from repro.distributed.sharding import constrain
 from repro.models.layers import _he, linear, rope
 
@@ -123,6 +123,32 @@ def dense_attention(cfg, q, k, v, q_pos, k_pos):
                           unroll=min(cfg.scan_unroll, nq))
     out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
     return out
+
+
+def spion_sparse_attention(cfg, q, k, v, spion_layer):
+    """Sparse-phase attention for one layer's BCSR tables.
+
+    spion_layer: {'col_idx': (nrb, K), 'nvalid': (nrb,), 'block': int}.
+    Dispatch follows cfg.spion.kernel: "auto" -> the fused differentiable
+    Pallas kernel on TPU, the pure-jnp BCSR path elsewhere; "fused"/"jnp"
+    force one. Both paths train — the fused kernel's backward is sparse too
+    (kernels/block_sparse_attn.py), which is what makes the sparse phase's
+    speedup honest for training, not just inference.
+    """
+    bcsr = BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
+                spion_layer["block"], q.shape[1])
+    impl = getattr(cfg.spion, "kernel", "auto")
+    if impl == "auto":
+        # fused only on single-device TPU: pallas_call has no GSPMD
+        # partitioning rule, so under a sharded mesh "auto" stays on the jnp
+        # path (its docstring calls it the GSPMD-compatible stand-in).
+        # `kernel="fused"` still forces the kernel, e.g. under shard_map.
+        on_tpu = jax.default_backend() == "tpu" and jax.device_count() == 1
+        impl = "fused" if on_tpu else "jnp"
+    if impl == "fused":
+        from repro.kernels.ops import spion_attention_kernel
+        return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True)
+    return bcsr_attention(cfg, q, k, v, bcsr)
 
 
 def attn_out(cfg, p, ctx):

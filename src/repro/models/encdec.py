@@ -9,7 +9,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_attention import BCSR, bcsr_attention
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -64,9 +63,7 @@ def _enc_block(cfg, lp, h, positions, spion_layer, capture):
         cap = A.capture_pooled_scores(ecfg, q, k, positions, positions,
                                       capture["filt"], capture["block"])
     if spion_layer is not None:
-        ctx = bcsr_attention(ecfg, q, k, v,
-                             BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
-                                  spion_layer["block"], x.shape[1]))
+        ctx = A.spion_sparse_attention(ecfg, q, k, v, spion_layer)
     else:
         ctx = A.dense_attention(ecfg, q, k, v, positions, positions)
     h = h + A.attn_out(ecfg, lp["attn"], ctx)
@@ -117,8 +114,8 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
                 cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                               capture["filt"], capture["block"])
             if sp is not None:
-                ctx = bcsr_attention(cfg, q, k, v,
-                                     BCSR(sp["col_idx"], sp["nvalid"], spion["block"], S))
+                ctx = A.spion_sparse_attention(cfg, q, k, v,
+                                               {**sp, "block": spion["block"]})
             else:
                 ctx = A.dense_attention(cfg, q, k, v, positions, positions)
             h = h + A.attn_out(cfg, lp["attn"], ctx)

@@ -8,7 +8,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_attention import BCSR, bcsr_attention
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -56,8 +55,9 @@ def _shared_attn_block(cfg, sp, h, positions, bcsr_tables, app_idx, capture):
     if bcsr_tables is not None:
         col = jnp.take(bcsr_tables["col_idx"], app_idx, axis=0)
         nv = jnp.take(bcsr_tables["nvalid"], app_idx, axis=0)
-        ctx = bcsr_attention(cfg, q, k, v,
-                             BCSR(col, nv, bcsr_tables["block"], x.shape[1]))
+        ctx = A.spion_sparse_attention(
+            cfg, q, k, v,
+            {"col_idx": col, "nvalid": nv, "block": bcsr_tables["block"]})
     else:
         ctx = A.dense_attention(cfg, q, k, v, positions, positions)
     h = h + A.attn_out(cfg, sp["attn"], ctx)

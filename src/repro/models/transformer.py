@@ -13,7 +13,6 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_attention import BCSR, bcsr_attention
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -66,9 +65,7 @@ def _self_attention(cfg, p, h, positions, spion_layer, capture):
         cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                       capture["filt"], capture["block"])  # (pooled, frob)
     if spion_layer is not None:
-        bcsr = BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
-                    spion_layer["block"], x.shape[1])
-        ctx = bcsr_attention(cfg, q, k, v, bcsr)
+        ctx = A.spion_sparse_attention(cfg, q, k, v, spion_layer)
     else:
         pos1d = positions
         ctx = A.dense_attention(cfg, q, k, v, pos1d, pos1d)

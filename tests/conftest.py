@@ -1,8 +1,94 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
-host device count (1 on CI); multi-device tests spawn subprocesses."""
+host device count (1 on CI); multi-device tests spawn subprocesses.
+
+`hypothesis` is a dev dependency (declared in pyproject.toml); environments
+without it (e.g. a bare container with only jax+numpy) fall back to a tiny
+deterministic stub so the tier-1 suite still collects and runs — the stub
+draws a fixed number of pseudo-random examples per @given test.
+"""
+import sys
+
 import numpy as np
 import pytest
-from hypothesis import settings
+
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:  # pragma: no cover - exercised only without hypothesis
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    def _lists(elem, min_size=0, max_size=10, **_kw):
+        return _Strategy(
+            lambda r: [elem.draw(r) for _ in range(r.randint(min_size, max_size))])
+
+    class _Settings:
+        _profiles = {}
+        _max_examples = 10
+
+        def __init__(self, max_examples=None, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, f):  # @settings(...) decorator form
+            if self.max_examples:
+                f._stub_max_examples = self.max_examples
+            return f
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._max_examples = cls._profiles.get(name, {}).get("max_examples", 10)
+
+    def _given(*strats, **kwstrats):
+        def deco(f):
+            def wrapper():
+                r = random.Random(0)
+                n = getattr(f, "_stub_max_examples", _Settings._max_examples)
+                for _ in range(n):
+                    drawn = [s.draw(r) for s in strats]
+                    kdrawn = {k: s.draw(r) for k, s in kwstrats.items()}
+                    f(*drawn, **kdrawn)
+            # keep pytest from treating the drawn params as fixtures: the
+            # wrapper's own (empty) signature must be what pytest inspects
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__module__ = f.__module__
+            return wrapper
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+    _hyp.strategies = _st
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+    from hypothesis import settings
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")

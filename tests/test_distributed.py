@@ -24,11 +24,17 @@ def test_param_spec_rules():
 
 
 def _run_sub(code):
+    import pathlib
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env={"PYTHONPATH": "src",
                                        "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+                                       # fake devices are host-platform; pin cpu so
+                                       # jax never probes other backends (hangs on
+                                       # network-less CI sandboxes)
+                                       "JAX_PLATFORMS": "cpu",
                                        "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo", timeout=300)
+                       cwd=root, timeout=300)
     assert r.returncode == 0, r.stderr[-2000:]
     return r.stdout
 
@@ -37,8 +43,8 @@ SANITIZE_CODE = """
 import jax
 from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import sanitize_spec
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 assert sanitize_spec(mesh, P("data", "model"), (4, 6)) == P("data", "model")
 assert sanitize_spec(mesh, P("data", "model"), (3, 6)) == P(None, "model")
 assert sanitize_spec(mesh, P(("data", "model"),), (6,)) == P(("data",),)
@@ -51,7 +57,8 @@ print("OK")
 PIPELINE_CODE = """
 import jax, jax.numpy as jnp
 from repro.distributed.pipeline import pipeline_apply
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("pod",))
 S, d = 4, 8
 ws = jnp.stack([jnp.eye(d) * (i + 1) for i in range(S)])
 x = jax.random.normal(jax.random.key(0), (8, d))
@@ -71,8 +78,8 @@ print("OK")
 COLLECTIVES_CODE = """
 import jax, jax.numpy as jnp
 from repro.distributed.collectives import compressed_grad_sync, hierarchical_grad_sync
-mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("pod", "data"))
 g = {"w": jnp.ones((8, 8)) * 0.25}
 s = compressed_grad_sync(mesh, g, axes=("data",))
 assert abs(float(s["w"][0, 0]) - 0.5) < 0.01
