@@ -1,6 +1,8 @@
 """Fig. 6: breakdown of MHA operation times — dense GEMM/softmax/GEMM vs
 sparse SDDMM/sparse-softmax/SpMM — plus the `train_step` mode that times
-forward+backward now that the fused kernel has a sparse backward.
+forward+backward now that the fused kernel has a sparse backward, and the
+`bwd` mode that separates the dQ vs dK/dV backward kernels and proves the
+SparsityPlan shrinks the dK/dV grid to the true pattern width KT*.
 
 CPU wall-times of the jitted jnp paths (the GPU numbers in the paper are
 hardware-specific; the *structure* — softmax dominating dense MHA, every
@@ -86,6 +88,82 @@ def rows(out, L=1024, D=64, block=32, density=0.08):
         f"density={density} dense={tot_d:.0f}us sparse={tot_s:.0f}us")
 
 
+def _skewed_pattern_plan(L, block):
+    """The ISSUE's skewed layer-wise pattern: layer 0 sliding-window (column
+    population <= 2), layer 1 causal diagonal + global stripe at column
+    nrb//2 (population nrb/2). KT* = nrb/2 < nrb, so the plan-built dK/dV
+    grid is half the always-safe padded width."""
+    from repro.core.sparse_attention import build_sparsity_plan
+    n = L // block
+    m0 = np.zeros((n, n), bool)
+    for r in range(n):
+        m0[r, max(r - 1, 0): r + 1] = True
+    m1 = np.zeros((n, n), bool)
+    np.fill_diagonal(m1, True)
+    stripe = n // 2
+    m1[stripe:, stripe] = True
+    K = max(int(m.sum(axis=1).max()) for m in (m0, m1))
+    tabs = [bcsr_from_blockmask(m, block, max_k=K) for m in (m0, m1)]
+    col = np.stack([np.asarray(t.col_idx) for t in tabs])
+    nv = np.stack([np.asarray(t.nvalid) for t in tabs])
+    return build_sparsity_plan(col, nv, block), col, nv
+
+
+def bwd_rows(out, L=256, block=16, smoke=False):
+    """`bwd` mode: dQ vs dK/dV backward-kernel timings through the host-built
+    SparsityPlan on the skewed synthetic pattern, asserting the dK/dV grid
+    width equals the plan's KT* (not the always-safe nrb). The padded-width
+    run (KT = nrb, what the under-jit bcsr_transpose fallback pays) is the
+    before; the plan run (KT*) is the after."""
+    from repro.core.sparse_attention import bcsr_transpose
+    from repro.kernels.block_sparse_attn import (_fused_dkv, _fused_dq,
+                                                 _fused_forward)
+    from repro.kernels.dispatch import default_interpret
+
+    if smoke:
+        L = 128
+    n = L // block
+    plan, col_st, nv_st = _skewed_pattern_plan(L, block)
+    kt = plan.kt_star
+    assert kt < n, f"skewed pattern must shrink the grid (KT*={kt}, nrb={n})"
+    # the dK/dV pallas grid is (N, ncb, row_idx.shape[-1], G): width == KT*
+    assert plan.tables["row_idx"].shape[-1] == kt, \
+        "plan dK/dV grid width must equal KT*"
+    out("bwd.dkv_grid_width", kt,
+        f"== KT* (true max column population); padded fallback would be nrb={n}")
+
+    N, G, hd = 2, 1, 32
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (N, G, L, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (N, L, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (N, L, hd))
+    # layer 1 (global stripe) is the interesting one: its own population is
+    # what drives KT*
+    col = jnp.maximum(jnp.asarray(col_st[1]), 0)
+    nv = jnp.asarray(nv_st[1])
+    kw = dict(block=block, causal=True, sliding_window=None,
+              interpret=default_interpret(None))
+    o, lse = _fused_forward(q, k, v, col, nv, **kw)
+    do = jax.random.normal(jax.random.fold_in(key, 3), o.shape)
+    delta = jnp.sum(do * o, -1)
+
+    t_dq = _time(jax.jit(lambda: _fused_dq(q, k, v, do, lse, delta, col, nv,
+                                           **kw)))
+    ri_pad, nvt_pad = bcsr_transpose(col, nv, ncb=n)          # KT = nrb
+    ri_plan = plan.tables["row_idx"][1]
+    nvt_plan = plan.tables["nvalid_t"][1]
+    t_pad = _time(jax.jit(lambda: _fused_dkv(q, k, v, do, lse, delta,
+                                             ri_pad, nvt_pad, **kw)))
+    t_plan = _time(jax.jit(lambda: _fused_dkv(q, k, v, do, lse, delta,
+                                              ri_plan, nvt_plan, **kw)))
+    out("bwd.dq_us", round(t_dq, 1), f"row-block grid (N,G,nrb,K) nrb={n}")
+    out("bwd.dkv_padded_us", round(t_pad, 1),
+        f"grid (N,ncb,{n},G) — always-safe KT=nrb (per-step-transpose path)")
+    out("bwd.dkv_plan_us", round(t_plan, 1),
+        f"grid (N,ncb,{kt},G) — plan KT*; grid_shrink={n / kt:.2f}x "
+        f"speedup={t_pad / t_plan:.2f}x")
+
+
 def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
     """fwd+bwd timings: the training-speed claim, not the inference one."""
     import dataclasses
@@ -146,6 +224,46 @@ def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
     else:
         out("train_step.attn_sparse_fused_fwdbwd_us", 0,
             "skipped: non-TPU backend runs the Pallas interpreter")
+
+    # SparsityPlan before/after (any backend; Pallas interpreter on CPU):
+    # fused fwd+bwd where the backward either rebuilds the transposed tables
+    # under jit at KT = nrb (before) or consumes the host-built plan tables
+    # at KT* (after), on the skewed sliding-window + global-stripe pattern.
+    Lp = 128 if smoke else 256
+    blkp = 16
+    plan, col_st, nv_st = _skewed_pattern_plan(Lp, blkp)
+    nrb_p = Lp // blkp
+    key = jax.random.key(7)
+    Np, Gp, hdp = 2, 1, 32
+    qp = jax.random.normal(key, (Np, Gp, Lp, hdp))
+    kp = jax.random.normal(jax.random.fold_in(key, 1), (Np, Lp, hdp))
+    vp = jax.random.normal(jax.random.fold_in(key, 2), (Np, Lp, hdp))
+    colp = jnp.maximum(plan.tables["col_idx"][1], 0)
+    nvp = plan.tables["nvalid"][1]
+
+    def loss_transpose(q, k, v):
+        o = fused_block_sparse_attention(q, k, v, colp, nvp, block=blkp,
+                                         causal=True)
+        return jnp.sum(o ** 2)
+
+    def loss_plan(q, k, v):
+        o = fused_block_sparse_attention(
+            q, k, v, colp, nvp, block=blkp, causal=True,
+            row_idx=plan.tables["row_idx"][1],
+            nvalid_t=plan.tables["nvalid_t"][1])
+        return jnp.sum(o ** 2)
+
+    reps = 3 if smoke else 5
+    t_before = _time(jax.jit(jax.value_and_grad(loss_transpose,
+                                                argnums=(0, 1, 2))),
+                     qp, kp, vp, reps=reps)
+    t_after = _time(jax.jit(jax.value_and_grad(loss_plan, argnums=(0, 1, 2))),
+                    qp, kp, vp, reps=reps)
+    out("train_step.attn_fused_bwd_transpose_us", round(t_before, 1),
+        f"before: under-jit bcsr_transpose, dK/dV grid width nrb={nrb_p}")
+    out("train_step.attn_fused_bwd_plan_us", round(t_after, 1),
+        f"after: SparsityPlan, dK/dV grid width KT*={plan.kt_star} "
+        f"speedup={t_before / t_after:.2f}x")
 
     # full optimizer step: dense phase vs sparse phase (jnp kernel — the
     # phase switch itself is what's being costed on CPU)

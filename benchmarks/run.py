@@ -8,7 +8,10 @@ perf history that CI uploads as an artifact.
   opcount          §4.4 exact op-count identities (Table-in-text)
   mha_breakdown    Fig. 6 dense vs sparse MHA op times
   train_step       fwd+bwd (training) timings through the differentiable
-                   fused kernel path — the paper's actual headline claim
+                   fused kernel path — the paper's actual headline claim —
+                   incl. SparsityPlan vs per-step-transpose before/after
+  bwd              dQ vs dK/dV backward-kernel split; asserts the dK/dV
+                   grid width equals the SparsityPlan's KT*
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
@@ -56,13 +59,16 @@ def _mods(smoke):
                             opcount, roofline, sparsity_ratio)
     train_step = SimpleNamespace(
         rows=functools.partial(mha_breakdown.train_step_rows, smoke=smoke))
+    bwd = SimpleNamespace(
+        rows=functools.partial(mha_breakdown.bwd_rows, smoke=smoke))
     if smoke:
         breakdown = SimpleNamespace(
             rows=functools.partial(mha_breakdown.rows, L=256))
         return [("opcount", opcount), ("mha_breakdown", breakdown),
-                ("train_step", train_step)]
+                ("train_step", train_step), ("bwd", bwd)]
     return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
-            ("train_step", train_step), ("sparsity_ratio", sparsity_ratio),
+            ("train_step", train_step), ("bwd", bwd),
+            ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),
             ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]
 

@@ -3,6 +3,10 @@
 Format: one directory per step containing
   - arrays.npz       every pytree leaf, fully replicated (gathered) view
   - meta.msgpack     treedef, step, extra host state (SPION phase, rng, ...)
+  - extra_arrays.npz optional named numpy arrays outside the pytree (the
+                     SPION SparsityPlan tables — int32 arrays that would
+                     balloon the JSON `extra` at production sequence
+                     lengths); restore returns them under extra["_arrays"]
   - DONE             commit marker (atomic rename makes the step visible)
 
 Mesh-agnostic restore: leaves are saved unsharded, so a checkpoint taken on
@@ -39,19 +43,28 @@ class CheckpointManager:
 
     # -- save ------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
-        """Gather to host, then (a)synchronously serialise + commit."""
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             extra_arrays: Optional[dict] = None):
+        """Gather to host, then (a)synchronously serialise + commit.
+        `extra_arrays` ({name: array}) are persisted binary alongside the
+        pytree — phase state like the SPION SparsityPlan tables rides here
+        instead of being JSON-encoded into `extra`."""
         host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if extra_arrays is not None:
+            extra_arrays = {k: np.asarray(jax.device_get(v))
+                            for k, v in extra_arrays.items()}
         if self._thread is not None:
             self._thread.join()
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, extra or {}), daemon=True)
+                target=self._write, args=(step, host_tree, extra or {},
+                                          extra_arrays), daemon=True)
             self._thread.start()
         else:
-            self._write(step, host_tree, extra or {})
+            self._write(step, host_tree, extra or {}, extra_arrays)
 
-    def _write(self, step: int, host_tree, extra: dict):
+    def _write(self, step: int, host_tree, extra: dict,
+               extra_arrays: Optional[dict] = None):
         tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
         final = os.path.join(self.dir, f"step_{step:09d}")
         if os.path.exists(tmp):
@@ -60,6 +73,8 @@ class CheckpointManager:
         leaves, treedef = _flatten(host_tree)
         np.savez(os.path.join(tmp, "arrays.npz"),
                  **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        if extra_arrays:
+            np.savez(os.path.join(tmp, "extra_arrays.npz"), **extra_arrays)
         with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
             f.write(msgpack.packb({"step": step, "treedef": treedef,
                                    "extra": json.dumps(extra)}))
@@ -97,7 +112,9 @@ class CheckpointManager:
     def restore(self, step: Optional[int] = None, target: Any = None,
                 shardings: Any = None):
         """Returns (tree, step, extra). `target` supplies the treedef;
-        `shardings` (optional pytree of NamedSharding) re-shards on load."""
+        `shardings` (optional pytree of NamedSharding) re-shards on load.
+        Arrays saved via `extra_arrays` come back under extra["_arrays"]
+        ({name: np.ndarray})."""
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None, None
@@ -115,4 +132,8 @@ class CheckpointManager:
             tree = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s), tree, shardings)
         extra = json.loads(meta["extra"]) if meta.get("extra") else {}
+        xa_path = os.path.join(path, "extra_arrays.npz")
+        if os.path.exists(xa_path):
+            with np.load(xa_path) as xa:
+                extra["_arrays"] = {k: xa[k] for k in xa.files}
         return tree, meta["step"], extra

@@ -58,6 +58,10 @@ def bcsr_transpose(col_idx, nvalid, ncb: int | None = None,
     (DESIGN.md §8). `max_k` bounds the padded width KT; it must be static.
     The default KT = nrb is the only always-safe bound: a vertical stripe
     (global-attention column) appears in every row-block.
+
+    This is the FALLBACK path: when a host-built SparsityPlan supplies
+    precomputed transposed tables (padded to the true width KT*), the fused
+    VJP uses those instead and this never runs under jit.
     """
     col_idx = jnp.asarray(col_idx, jnp.int32)
     nvalid = jnp.asarray(nvalid, jnp.int32)
@@ -75,6 +79,126 @@ def bcsr_transpose(col_idx, nvalid, ncb: int | None = None,
     row_idx = jnp.argsort(keys, axis=1)[:, :KT].astype(jnp.int32)
     nvalid_t = jnp.minimum(maskT.sum(axis=1), KT).astype(jnp.int32)
     return row_idx, nvalid_t
+
+
+# the SparsityPlan's array payload — every site that threads tables through
+# a step/scan filters on these keys (a missed key silently degrades the
+# backward to the KT = nrb fallback, so keep the list in ONE place)
+PLAN_TABLE_KEYS = ("col_idx", "nvalid", "row_idx", "nvalid_t")
+
+
+class SparsityPlan(NamedTuple):
+    """Host-built sparse-phase plan (DESIGN.md §8).
+
+    `tables` is the step-input payload broadcast with the batch:
+        col_idx  (Ly, nrb, K)   forward BCSR; entries past nvalid may be -1
+                                (bcsr_from_blockmask convention — kernel
+                                callers clamp, see ops._prep_tables)
+        nvalid   (Ly, nrb)
+        row_idx  (Ly, ncb, KT*) transposed BCSR; entries past nvalid_t are
+                                clamped in-range row ids
+        nvalid_t (Ly, ncb)
+        block    int (static)
+    `kt_star` is the TRUE max column population across all layers — the
+    static padded width of the transposed tables, so the fused VJP's dK/dV
+    grid is (N, ncb, KT*, G) instead of the always-safe (N, ncb, nrb, G).
+    `stats` holds host-only occupancy numbers (never enters the jitted step).
+    """
+    tables: dict
+    kt_star: int
+    stats: dict
+
+
+def host_transpose_tables(col_idx, nvalid, ncb: int | None = None,
+                          max_kt: int | None = None):
+    """Host-side (numpy) transpose of padded-BCSR tables, stacked or single.
+
+    col_idx (Ly, nrb, K) / nvalid (Ly, nrb)  ->
+        (row_idx (Ly, ncb, KT), nvalid_t (Ly, ncb), KT)
+    with KT = the true max column population across layers (the tightest
+    static width) unless `max_kt` pins it. Entries past `nvalid_t[l, c]` are
+    clamped in-range row ids (same padding convention as `col_idx`), and the
+    valid prefix lists row-blocks ascending — identical to the under-jit
+    `bcsr_transpose` output on the valid region, but computed once at phase
+    transition instead of inside every backward pass.
+    """
+    col = np.asarray(col_idx)
+    nv = np.asarray(nvalid)
+    squeeze = col.ndim == 2
+    if squeeze:
+        col, nv = col[None], nv[None]
+    Ly, nrb, K = col.shape
+    ncb = int(ncb) if ncb is not None else nrb
+    # vectorized O(nnz log nnz) per layer — never materialises the dense
+    # (nrb, ncb) block mask (nrb can reach ~8k at production seq lengths)
+    counts = np.zeros((Ly, ncb), np.int64)
+    entries = []
+    for layer in range(Ly):
+        rows, ks = np.nonzero(np.arange(K)[None, :] < nv[layer][:, None])
+        cols = np.clip(col[layer, rows, ks], 0, ncb - 1).astype(np.int64)
+        # dedupe (row, col) pairs — duplicate/clamped entries count once,
+        # matching the dense-mask semantics of bcsr_transpose
+        pairs = np.unique(rows.astype(np.int64) * ncb + cols)
+        rows_u = (pairs // ncb).astype(np.int32)
+        cols_u = (pairs % ncb).astype(np.int32)
+        np.add.at(counts[layer], cols_u, 1)
+        entries.append((rows_u, cols_u))
+    KT = int(max_kt) if max_kt is not None else max(int(counts.max()), 1)
+    row_idx = np.zeros((Ly, ncb, KT), np.int32)
+    nvalid_t = np.minimum(counts, KT).astype(np.int32)
+    for layer in range(Ly):
+        rows_u, cols_u = entries[layer]
+        order = np.lexsort((rows_u, cols_u))     # column-major, rows ascending
+        rows_s, cols_s = rows_u[order], cols_u[order]
+        starts = np.zeros(ncb + 1, np.int64)
+        np.cumsum(counts[layer], out=starts[1:])
+        pos = np.arange(len(rows_s)) - starts[cols_s]   # rank within column
+        keep = pos < KT
+        row_idx[layer, cols_s[keep], pos[keep]] = rows_s[keep]
+        # clamped padding: repeat each column's last valid row id (0 if empty)
+        nvt = nvalid_t[layer]
+        fill = np.where(nvt > 0,
+                        row_idx[layer, np.arange(ncb), np.maximum(nvt - 1, 0)],
+                        0)
+        tail = np.arange(KT)[None, :] >= nvt[:, None]
+        row_idx[layer] = np.where(tail, fill[:, None], row_idx[layer])
+    if squeeze:
+        return row_idx[0], nvalid_t[0], KT
+    return row_idx, nvalid_t, KT
+
+
+def build_sparsity_plan(col_idx, nvalid, block: int, *, ncb: int | None = None,
+                        max_kt: int | None = None) -> SparsityPlan:
+    """Build the full SparsityPlan from (stacked or single-layer) forward
+    BCSR tables. Pattern generation is a rare host-side event, so this runs
+    in numpy; the products are cheap step inputs. Always returns stacked
+    tables (single-layer inputs get Ly=1)."""
+    col = np.asarray(col_idx, np.int32)
+    nv = np.asarray(nvalid, np.int32)
+    if col.ndim == 2:
+        col, nv = col[None], nv[None]
+    Ly, nrb, K = col.shape
+    ncb_ = int(ncb) if ncb is not None else nrb
+    row_idx, nvalid_t, kt = host_transpose_tables(col, nv, ncb=ncb_,
+                                                  max_kt=max_kt)
+    stats = {
+        "kt_star": int(kt),
+        "nrb": int(nrb),
+        "ncb": int(ncb_),
+        "K": int(K),
+        "per_layer_max_col_population": nvalid_t.max(axis=1).astype(int).tolist(),
+        "per_layer_density": [round(float(d), 6)
+                              for d in nv.sum(axis=1) / float(nrb * ncb_)],
+        "dkv_grid_shrink": round(float(nrb) / float(kt), 4),
+    }
+    tables = {
+        "col_idx": jnp.asarray(col),
+        "nvalid": jnp.asarray(nv),
+        "row_idx": jnp.asarray(row_idx),
+        "nvalid_t": jnp.asarray(nvalid_t),
+        "block": int(block),
+    }
+    return SparsityPlan(tables, int(kt), stats)
 
 
 def full_bcsr(seq_len: int, block: int) -> BCSR:

@@ -3,10 +3,11 @@
 Phases:  dense  --(Frobenius criterion)-->  pattern generation  -->  sparse.
 
 The controller is host-side state; the jitted step only sees (a) a `capture`
-kwarg during the dense phase and (b) stacked BCSR tables during the sparse
-phase. Pattern generation runs once, on rank-0, between epochs, and the tiny
-BCSR tables (K * L/B int32 per layer) are broadcast as step inputs — no
-scaling cliff at 1000+ nodes (DESIGN.md §8).
+kwarg during the dense phase and (b) the SparsityPlan tables during the
+sparse phase. Pattern generation runs once, on rank-0, between epochs; the
+plan (forward BCSR + transposed tables padded to the true column-population
+width KT*, all tiny int32) is broadcast as step inputs — no scaling cliff at
+1000+ nodes (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ import numpy as np
 
 from repro.configs.base import SpionConfig
 from repro.core.pattern import diagonal_filter, generate_pattern
-from repro.core.sparse_attention import bcsr_from_blockmask
+from repro.core.sparse_attention import (PLAN_TABLE_KEYS, bcsr_from_blockmask,
+                                         build_sparsity_plan)
 
 
 @dataclass
@@ -28,34 +30,71 @@ class SpionState:
     epoch: int = 0
     frob_hist: List[np.ndarray] = field(default_factory=list)   # per-epoch (Ly,)
     dist_hist: List[float] = field(default_factory=list)
-    tables: Optional[dict] = None            # stacked BCSR for the jitted step
+    tables: Optional[dict] = None            # SparsityPlan payload for the step
     density: Optional[float] = None
+    plan_stats: Optional[dict] = None        # host-only occupancy stats
 
-    def to_py(self):
-        return {
+    def to_py(self, include_tables: bool = True):
+        """JSON-safe dict. With include_tables=False the (potentially large)
+        plan arrays are left out — pass them via `table_arrays()` to a binary
+        store (checkpoint extra_arrays) and hand them back to `from_py`."""
+        d = {
             "phase": self.phase,
             "epoch": self.epoch,
             "frob_hist": [h.tolist() for h in self.frob_hist],
             "dist_hist": list(self.dist_hist),
             "density": self.density,
-            "tables": None if self.tables is None else {
-                "col_idx": np.asarray(self.tables["col_idx"]).tolist(),
-                "nvalid": np.asarray(self.tables["nvalid"]).tolist(),
-                "block": int(self.tables["block"]),
-            },
+            "plan_stats": self.plan_stats,
         }
+        if self.tables is None:
+            d["tables"] = None
+        elif include_tables:
+            d["tables"] = {k: np.asarray(self.tables[k]).tolist()
+                           for k in PLAN_TABLE_KEYS if k in self.tables}
+            d["tables"]["block"] = int(self.tables["block"])
+        else:
+            d["tables_meta"] = {"block": int(self.tables["block"])}
+        return d
+
+    def table_arrays(self):
+        """Plan arrays as numpy, for binary persistence (None in dense phase)."""
+        if self.tables is None:
+            return None
+        return {k: np.asarray(self.tables[k])
+                for k in PLAN_TABLE_KEYS if k in self.tables}
 
     @staticmethod
-    def from_py(d):
+    def from_py(d, arrays: Optional[dict] = None):
         st = SpionState(phase=d["phase"], epoch=d["epoch"],
-                        dist_hist=list(d["dist_hist"]), density=d.get("density"))
+                        dist_hist=list(d["dist_hist"]), density=d.get("density"),
+                        plan_stats=d.get("plan_stats"))
         st.frob_hist = [np.asarray(h) for h in d["frob_hist"]]
-        if d.get("tables"):
-            st.tables = {
-                "col_idx": jnp.asarray(np.asarray(d["tables"]["col_idx"], np.int32)),
-                "nvalid": jnp.asarray(np.asarray(d["tables"]["nvalid"], np.int32)),
-                "block": int(d["tables"]["block"]),
-            }
+        tab = d.get("tables")
+        meta = d.get("tables_meta")
+        if arrays and (tab or meta):
+            st.tables = {k: jnp.asarray(np.asarray(arrays[k], np.int32))
+                         for k in PLAN_TABLE_KEYS if k in arrays}
+            st.tables["block"] = int((tab or meta)["block"])
+        elif meta and not tab:
+            # tables_meta promises binary plan arrays; resuming without them
+            # would silently run the sparse phase with tables=None (dense
+            # steps forever) — fail loudly instead
+            raise ValueError(
+                "SpionState.from_py: state has tables_meta but no plan "
+                "arrays were supplied (checkpoint extra_arrays missing or "
+                "unreadable)")
+        elif tab:
+            st.tables = {k: jnp.asarray(np.asarray(tab[k], np.int32))
+                         for k in PLAN_TABLE_KEYS if k in tab}
+            st.tables["block"] = int(tab["block"])
+        if st.tables is not None and "row_idx" not in st.tables:
+            # legacy (pre-plan) checkpoint: rebuild the transposed tables
+            # host-side ONCE here, not silently per-step under jit
+            plan = build_sparsity_plan(st.tables["col_idx"],
+                                       st.tables["nvalid"],
+                                       st.tables["block"])
+            st.tables = plan.tables
+            st.plan_stats = plan.stats
         return st
 
 
@@ -107,7 +146,10 @@ class SpionController:
         return state
 
     def generate(self, state: SpionState, pooled: np.ndarray) -> SpionState:
-        """Pattern generation for every layer; builds stacked padded BCSR."""
+        """Pattern generation for every layer; builds the full SparsityPlan:
+        stacked padded BCSR plus the transposed tables at the true max
+        column population KT* (host-side, once — the fused VJP's dK/dV grid
+        then runs (N, ncb, KT*, G) with no per-step transpose)."""
         pooled = np.asarray(pooled, np.float64)
         Ly = pooled.shape[0]
         masks = [
@@ -119,11 +161,12 @@ class SpionController:
         ]
         K = self.cfg.max_blocks_per_row or max(int(m.sum(axis=1).max()) for m in masks)
         tabs = [bcsr_from_blockmask(m, self.cfg.block_size, max_k=K) for m in masks]
-        state.tables = {
-            "col_idx": jnp.stack([t.col_idx for t in tabs]),
-            "nvalid": jnp.stack([t.nvalid for t in tabs]),
-            "block": self.cfg.block_size,
-        }
+        plan = build_sparsity_plan(
+            np.stack([np.asarray(t.col_idx) for t in tabs]),
+            np.stack([np.asarray(t.nvalid) for t in tabs]),
+            self.cfg.block_size)
+        state.tables = plan.tables
+        state.plan_stats = plan.stats
         state.density = float(np.mean([m.mean() for m in masks]))
         state.phase = "sparse"
         return state

@@ -17,12 +17,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pattern import bigbird_pattern, window_pattern
-from repro.core.sparse_attention import bcsr_from_blockmask
+from repro.core.sparse_attention import bcsr_from_blockmask, build_sparsity_plan
 
 
 def fixed_pattern_tables(kind: str, seq_len: int, block: int, num_layers: int,
                          *, causal: bool = False, seed: int = 0, **kw):
-    """Stacked BCSR tables for a fixed pattern applied to every layer."""
+    """Full SparsityPlan tables for a fixed pattern applied to every layer —
+    the BigBird/Longformer baselines get the same plan-built transposed
+    tables (true width KT*) as SPION, so the backward comparison is fair."""
     n = seq_len // block
     if kind == "bigbird":
         mask = bigbird_pattern(n, causal=causal, seed=seed, **kw)
@@ -32,11 +34,14 @@ def fixed_pattern_tables(kind: str, seq_len: int, block: int, num_layers: int,
         raise ValueError(kind)
     K = int(mask.sum(axis=1).max())
     t = bcsr_from_blockmask(mask, block, max_k=K)
-    return {
-        "col_idx": jnp.stack([t.col_idx] * num_layers),
-        "nvalid": jnp.stack([t.nvalid] * num_layers),
-        "block": block,
-    }
+    # every layer shares one mask: build the plan ONCE and broadcast, instead
+    # of re-transposing num_layers identical tables
+    plan = build_sparsity_plan(np.asarray(t.col_idx), np.asarray(t.nvalid),
+                               block)
+    tables = {k: jnp.broadcast_to(v[0], (num_layers,) + v.shape[1:])
+              for k, v in plan.tables.items() if hasattr(v, "shape")}
+    tables["block"] = block
+    return tables
 
 
 # ---------------------------------------------------------------------------

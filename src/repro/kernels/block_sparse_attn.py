@@ -16,19 +16,24 @@ probabilities reconstruct exactly as p = exp(s - lse) in the backward.
 Backward (flash-attention-2 style, sparse):
   dQ    — same (N, G, nrb, K) row-block grid as the forward, streaming the
           active KV tiles and accumulating dq = scale * sum_c ds_c K_c.
-  dK/dV — column-block grid over the TRANSPOSED BCSR tables
-          (core.sparse_attention.bcsr_transpose): for column-block c, stream
-          the row-blocks that reference it (and the G query heads sharing
-          the kv head, innermost so the output tile is revisited
-          consecutively) and accumulate dv += p^T dO, dk += scale * ds^T Q.
+  dK/dV — column-block grid over the TRANSPOSED BCSR tables: for
+          column-block c, stream the row-blocks that reference it (and the
+          G query heads sharing the kv head, innermost so the output tile is
+          revisited consecutively) and accumulate dv += p^T dO,
+          dk += scale * ds^T Q. The transposed tables come either from a
+          host-built SparsityPlan (width KT* = true max column population,
+          precomputed at phase transition) or, as a fallback, from the
+          under-jit core.sparse_attention.bcsr_transpose at the always-safe
+          width KT = nrb.
 Both recompute p from (q, k, lse); ds = p * (dp - delta) with
 delta = rowsum(dO * O). The Alg. 6 phantom positions carry constant score 0
 and no value, so they alter only the forward normaliser — the standard
 softmax cotangent identity still holds on the active pattern and gradients
 match the dense reference there (tests/test_kernels.py).
 
-Grids: fwd/dQ (N, G, nrb, K); dK/dV (N, ncb, KT, G) — innermost dims
-sequential; accumulators in VMEM scratch.
+Grids: fwd/dQ (N, G, nrb, K); dK/dV (N, ncb, KT, G) with KT = KT* under a
+plan, KT = nrb on the fallback — innermost dims sequential; accumulators in
+VMEM scratch.
 """
 from __future__ import annotations
 
@@ -306,11 +311,49 @@ def _int_zero(x):
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_op(block, causal, sliding_window, interpret):
+def _fused_op(block, causal, sliding_window, interpret, with_plan):
     """One differentiable fused-attention op per static config (cached so the
-    custom_vjp identity is stable across traces)."""
+    custom_vjp identity is stable across traces).
+
+    with_plan=True takes precomputed transposed tables (row_idx, nvalid_t)
+    as extra primal inputs — the host-built SparsityPlan path: the dK/dV
+    grid width is row_idx.shape[1] = KT* (true max column population) and no
+    bcsr_transpose runs under jit. with_plan=False is the fallback that
+    rebuilds the transposed tables in every backward at width KT = nrb.
+    """
     fwd_ = functools.partial(_fused_forward, block=block, causal=causal,
                              sliding_window=sliding_window, interpret=interpret)
+
+    def bwd_core(q, k, v, col_idx, nvalid, o, lse, do, row_idx, nvalid_t):
+        """Shared backward body — both vjp variants differ only in where the
+        transposed tables come from (plan residuals vs under-jit rebuild)."""
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+        dq = _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, block=block,
+                       causal=causal, sliding_window=sliding_window,
+                       interpret=interpret)
+        dk, dv = _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t,
+                            block=block, causal=causal,
+                            sliding_window=sliding_window, interpret=interpret)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    if with_plan:
+        @jax.custom_vjp
+        def op(q, k, v, col_idx, nvalid, row_idx, nvalid_t):
+            return fwd_(q, k, v, col_idx, nvalid)[0]
+
+        def op_fwd(q, k, v, col_idx, nvalid, row_idx, nvalid_t):
+            o, lse = fwd_(q, k, v, col_idx, nvalid)
+            return o, (q, k, v, col_idx, nvalid, row_idx, nvalid_t, o, lse)
+
+        def op_bwd(res, do):
+            q, k, v, col_idx, nvalid, row_idx, nvalid_t, o, lse = res
+            dq, dk, dv = bwd_core(q, k, v, col_idx, nvalid, o, lse, do,
+                                  row_idx, nvalid_t)
+            return (dq, dk, dv, _int_zero(col_idx), _int_zero(nvalid),
+                    _int_zero(row_idx), _int_zero(nvalid_t))
+
+        op.defvjp(op_fwd, op_bwd)
+        return op
 
     @jax.custom_vjp
     def op(q, k, v, col_idx, nvalid):
@@ -322,17 +365,11 @@ def _fused_op(block, causal, sliding_window, interpret):
 
     def op_bwd(res, do):
         q, k, v, col_idx, nvalid, o, lse = res
-        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
-        dq = _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, block=block,
-                       causal=causal, sliding_window=sliding_window,
-                       interpret=interpret)
-        ncb = k.shape[1] // block
-        row_idx, nvalid_t = bcsr_transpose(col_idx, nvalid, ncb=ncb)
-        dk, dv = _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t,
-                            block=block, causal=causal,
-                            sliding_window=sliding_window, interpret=interpret)
-        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
-                _int_zero(col_idx), _int_zero(nvalid))
+        row_idx, nvalid_t = bcsr_transpose(col_idx, nvalid,
+                                           ncb=k.shape[1] // block)
+        dq, dk, dv = bwd_core(q, k, v, col_idx, nvalid, o, lse, do,
+                              row_idx, nvalid_t)
+        return dq, dk, dv, _int_zero(col_idx), _int_zero(nvalid)
 
     op.defvjp(op_fwd, op_bwd)
     return op
@@ -340,15 +377,24 @@ def _fused_op(block, causal, sliding_window, interpret):
 
 def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
                                  causal=False, sliding_window=None,
-                                 interpret=None):
+                                 interpret=None, row_idx=None, nvalid_t=None):
     """q (N, G, S, hd) — G query heads share each kv head; k, v (N, S, hd);
     col_idx (nrb, K) clamped, nvalid (nrb,). Returns (N, G, S, hd).
 
     Differentiable: jax.grad flows through Pallas dQ / dK/dV kernels (dK/dV
     sum over the G query heads of each kv head). `interpret=None` resolves
     from the platform (compiled on TPU, interpreter elsewhere).
+
+    When a host-built SparsityPlan supplies `row_idx (ncb, KT*)` and
+    `nvalid_t (ncb,)`, the dK/dV backward grid is (N, ncb, KT*, G) — sized
+    to the measured pattern — and no bcsr_transpose runs under jit. Without
+    them the backward falls back to the under-jit transpose at the
+    always-safe width KT = nrb.
     """
     op = _fused_op(int(block), bool(causal),
                    None if sliding_window is None else int(sliding_window),
-                   default_interpret(interpret))
+                   default_interpret(interpret), row_idx is not None)
+    if row_idx is not None:
+        return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32),
+                  row_idx.astype(jnp.int32), nvalid_t.astype(jnp.int32))
     return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32))

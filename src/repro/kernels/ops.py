@@ -50,14 +50,16 @@ def _merge_heads(o, dims):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block", "fused", "interpret"))
-def _dispatch(q, k, v, col, nvalid, *, cfg, block, fused, interpret):
+def _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, *, cfg, block, fused,
+              interpret):
     causal = cfg.causal
     sw = cfg.sliding_window
     qh, kh, vh, dims = _split_heads(q, k, v)
     if fused:
         o = fused_block_sparse_attention(qh, kh, vh, col, nvalid, block=block,
                                          causal=causal, sliding_window=sw,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         row_idx=row_idx, nvalid_t=nvalid_t)
         return _merge_heads(o, dims)
     B, S, H, hd, KV, G = dims
     qf = qh.reshape(B * KV * G, S, hd)
@@ -71,9 +73,14 @@ def _dispatch(q, k, v, col, nvalid, *, cfg, block, fused, interpret):
     return _merge_heads(o.reshape(B * KV, G, S, hd), dims)
 
 
-def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None):
+def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None,
+                           row_idx=None, nvalid_t=None):
     """Pallas-kernel counterpart of core.sparse_attention.bcsr_attention.
-    With fused=True the result is differentiable (sparse backward kernels)."""
+    With fused=True the result is differentiable (sparse backward kernels).
+    `row_idx`/`nvalid_t` are a SparsityPlan's precomputed transposed tables
+    (width KT*); supplying them shrinks the dK/dV backward grid to the true
+    pattern width and removes the per-step under-jit bcsr_transpose."""
     col, nvalid = _prep_tables(bcsr)
-    return _dispatch(q, k, v, col, nvalid, cfg=cfg, block=bcsr.block,
-                     fused=fused, interpret=default_interpret(interpret))
+    return _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, cfg=cfg,
+                     block=bcsr.block, fused=fused,
+                     interpret=default_interpret(interpret))

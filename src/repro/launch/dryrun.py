@@ -29,6 +29,7 @@ from repro.distributed.sharding import (mesh_context, param_pspecs,  # noqa: E40
 from repro.launch import hlo  # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,  # noqa: E402
                                make_production_mesh)
+from repro.core.sparse_attention import PLAN_TABLE_KEYS  # noqa: E402
 from repro.launch.steps import (batch_pspecs, cache_pspecs, make_prefill_step,  # noqa: E402
                                 make_serve_step, make_train_step,
                                 spion_dryrun_tables)
@@ -95,12 +96,14 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
             if mode == "sparse":
                 blk = tables["block"]
 
-                def fn(p, o, b, s, col, nv):
+                def fn(p, o, b, s, col, nv, row, nvt):
                     return step_fn(p, o, b, s,
-                                   {"col_idx": col, "nvalid": nv, "block": blk})
-                args += [jax.ShapeDtypeStruct(tables["col_idx"].shape, jnp.int32),
-                         jax.ShapeDtypeStruct(tables["nvalid"].shape, jnp.int32)]
-                in_sh += [rep, rep]
+                                   {"col_idx": col, "nvalid": nv,
+                                    "row_idx": row, "nvalid_t": nvt,
+                                    "block": blk})
+                args += [jax.ShapeDtypeStruct(tables[k].shape, jnp.int32)
+                         for k in PLAN_TABLE_KEYS]
+                in_sh += [rep, rep, rep, rep]
                 jf = jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh,
                              donate_argnums=(0, 1))
             else:
@@ -119,11 +122,13 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
         if mode == "sparse":
             blk = tables["block"]
 
-            def fn(p, b, col, nv):
-                return step_fn(p, b, {"col_idx": col, "nvalid": nv, "block": blk})
-            args += [jax.ShapeDtypeStruct(tables["col_idx"].shape, jnp.int32),
-                     jax.ShapeDtypeStruct(tables["nvalid"].shape, jnp.int32)]
-            in_sh += [rep, rep]
+            def fn(p, b, col, nv, row, nvt):
+                return step_fn(p, b, {"col_idx": col, "nvalid": nv,
+                                      "row_idx": row, "nvalid_t": nvt,
+                                      "block": blk})
+            args += [jax.ShapeDtypeStruct(tables[k].shape, jnp.int32)
+                     for k in PLAN_TABLE_KEYS]
+            in_sh += [rep, rep, rep, rep]
             jf = jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=logits_sh)
         else:
             jf = jax.jit(step_fn, in_shardings=tuple(in_sh), out_shardings=logits_sh)

@@ -13,6 +13,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.sparse_attention import PLAN_TABLE_KEYS
 from repro.distributed.sharding import (data_axes, param_pspecs, sanitize_spec,
                                          zero1_pspecs)
 from repro.models.registry import build, cache_specs, input_specs
@@ -74,8 +75,15 @@ def cache_pspecs(cfg: ModelConfig, cache, mesh: Mesh, batch_size: int):
 def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = None):
     """Deterministic SPION-shaped pattern (diag band + verticals) at the
     configured alpha density — the sparse-phase stand-in for dry-runs.
-    Tables are tiny ((Ly, nrb, K) int32) and enter the step as inputs."""
+    Tables are tiny ((Ly, nrb, K) int32) and enter the step as inputs.
+
+    Emits the full SparsityPlan payload — forward tables PLUS the host-built
+    transposed tables (row_idx (Ly, nrb, KT*), nvalid_t (Ly, nrb)) and the
+    static width 'kt_star' — so dryrun/HLO checks exercise the exact step
+    signature (and catch plan-shape bugs) before a real run."""
     import numpy as np
+
+    from repro.core.sparse_attention import build_sparsity_plan
     sp = cfg.spion
     blk = sp.block_size
     nrb = max(seq_len // blk, 1)
@@ -100,11 +108,15 @@ def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = 
             nval[l, r] = len(cs)
             if len(cs) < K:
                 cols[l, r, len(cs):] = cs[-1]          # clamped padding
-    return {"col_idx": jnp.asarray(cols), "nvalid": jnp.asarray(nval), "block": blk}
+    plan = build_sparsity_plan(cols, nval, blk, ncb=nrb)
+    return dict(plan.tables, kt_star=plan.kt_star)
 
 
 def spion_table_pspecs(tables):
-    return {"col_idx": P(), "nvalid": P(), "block": None}
+    """Replicated specs for every array leaf; None for static ints
+    (block / kt_star) — the plan tables are kilobytes, broadcast whole."""
+    return {k: (P() if hasattr(v, "shape") else None)
+            for k, v in tables.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -116,8 +128,11 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
                     sparse_kernel=None):
     """Returns f(params_f32, opt_state, batch, step[, tables]) ->
     (params, opt_state, metrics). `spion` adds a BCSR tables argument
-    ({'col_idx','nvalid'} arrays; the block size is STATIC via `block` /
-    cfg.spion.block_size — an int leaf would turn into a tracer under jit).
+    ({'col_idx','nvalid'} arrays, optionally a SparsityPlan's transposed
+    {'row_idx','nvalid_t'} — then the fused sparse backward runs its dK/dV
+    grid at the plan width KT* with no under-jit transpose; the block size
+    is STATIC via `block` / cfg.spion.block_size — an int leaf would turn
+    into a tracer under jit).
     n_micro > 1 scans microbatches with gradient accumulation (activation
     memory scales ~1/n_micro; the standard large-scale fit knob).
 
@@ -133,8 +148,12 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
 
     def step_fn(params, opt_state, batch, step, tables=None):
         if tables is not None:
-            tables = {"col_idx": tables["col_idx"], "nvalid": tables["nvalid"],
-                      "block": static_block}
+            # rebuild with the STATIC block (an int leaf would be a tracer
+            # under jit) and drop other static scalars (kt_star); thread the
+            # SparsityPlan transposed tables through when supplied so the
+            # fused VJP's dK/dV grid runs at the true pattern width KT*
+            tables = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
+            tables["block"] = static_block
         def cast(p):
             return jax.tree_util.tree_map(
                 lambda x: x.astype(compute_dtype)
@@ -181,10 +200,16 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
     return functools.partial(step_fn, tables=None)
 
 
-def make_prefill_step(cfg: ModelConfig, *, spion=False):
+def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None):
     bundle = build(cfg)
+    static_block = block or cfg.spion.block_size
 
     def prefill(params, batch, tables=None):
+        if tables is not None:
+            # same static-block rebuild as make_train_step: accept the full
+            # SparsityPlan payload (incl. int leaves) directly under jit
+            tables = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
+            tables["block"] = static_block
         logits, _ = bundle.forward(params, batch, spion=tables)
         return logits
 

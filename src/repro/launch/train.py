@@ -84,8 +84,15 @@ class Trainer:
 
     def save(self):
         if self.ckpt:
-            self.ckpt.save(self.step, self._state_tree(),
-                           extra={"spion": self.spion_state.to_py(), "step": self.step})
+            # plan tables go binary (extra_arrays) — the JSON extra keeps only
+            # scalars, so a production-size SparsityPlan doesn't bloat meta
+            arrays = self.spion_state.table_arrays()
+            self.ckpt.save(
+                self.step, self._state_tree(),
+                extra={"spion": self.spion_state.to_py(include_tables=False),
+                       "step": self.step},
+                extra_arrays=None if arrays is None else
+                {f"spion_{k}": v for k, v in arrays.items()})
 
     def _restore_latest(self):
         if not self.ckpt:
@@ -95,7 +102,10 @@ class Trainer:
             self.params, self.opt = tree["params"], tree["opt"]
             self.step = extra.get("step", step or 0)
             if extra.get("spion"):
-                self.spion_state = SpionState.from_py(extra["spion"])
+                arrays = {k[len("spion_"):]: v
+                          for k, v in extra.get("_arrays", {}).items()
+                          if k.startswith("spion_")} or None
+                self.spion_state = SpionState.from_py(extra["spion"], arrays)
 
     def maybe_resume(self):
         if self.ckpt and self.ckpt.latest_step() is not None:

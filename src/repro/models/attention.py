@@ -128,7 +128,11 @@ def dense_attention(cfg, q, k, v, q_pos, k_pos):
 def spion_sparse_attention(cfg, q, k, v, spion_layer):
     """Sparse-phase attention for one layer's BCSR tables.
 
-    spion_layer: {'col_idx': (nrb, K), 'nvalid': (nrb,), 'block': int}.
+    spion_layer: {'col_idx': (nrb, K), 'nvalid': (nrb,), 'block': int} plus,
+    when a host-built SparsityPlan is threaded through the step, the layer's
+    precomputed transposed tables {'row_idx': (ncb, KT*), 'nvalid_t': (ncb,)}
+    — the fused kernel's dK/dV backward grid then shrinks to the true
+    pattern width KT* and the per-step under-jit bcsr_transpose disappears.
     Dispatch follows cfg.spion.kernel: "auto" -> the fused differentiable
     Pallas kernel on TPU, the pure-jnp BCSR path elsewhere; "fused"/"jnp"
     force one. Both paths train — the fused kernel's backward is sparse too
@@ -147,7 +151,9 @@ def spion_sparse_attention(cfg, q, k, v, spion_layer):
         impl = "fused" if on_tpu else "jnp"
     if impl == "fused":
         from repro.kernels.ops import spion_attention_kernel
-        return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True)
+        return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True,
+                                      row_idx=spion_layer.get("row_idx"),
+                                      nvalid_t=spion_layer.get("nvalid_t"))
     return bcsr_attention(cfg, q, k, v, bcsr)
 
 

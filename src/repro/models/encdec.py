@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse_attention import PLAN_TABLE_KEYS
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -133,7 +134,8 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
         h, cap = run(h, lp, sp)
         return h, cap
 
-    sp_stacked = None if spion is None else {"col_idx": spion["col_idx"], "nvalid": spion["nvalid"]}
+    sp_stacked = None if spion is None else {
+        k: spion[k] for k in PLAN_TABLE_KEYS if k in spion}
     h, caps = jax.lax.scan(body, h, (params["dec_layers"], sp_stacked),
                            unroll=cfg.scan_unroll)
     h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)

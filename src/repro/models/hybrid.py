@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse_attention import PLAN_TABLE_KEYS
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -53,11 +54,11 @@ def _shared_attn_block(cfg, sp, h, positions, bcsr_tables, app_idx, capture):
         cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                       capture["filt"], capture["block"])
     if bcsr_tables is not None:
-        col = jnp.take(bcsr_tables["col_idx"], app_idx, axis=0)
-        nv = jnp.take(bcsr_tables["nvalid"], app_idx, axis=0)
-        ctx = A.spion_sparse_attention(
-            cfg, q, k, v,
-            {"col_idx": col, "nvalid": nv, "block": bcsr_tables["block"]})
+        layer = {"block": bcsr_tables["block"]}
+        for name in PLAN_TABLE_KEYS:
+            if name in bcsr_tables:
+                layer[name] = jnp.take(bcsr_tables[name], app_idx, axis=0)
+        ctx = A.spion_sparse_attention(cfg, q, k, v, layer)
     else:
         ctx = A.dense_attention(cfg, q, k, v, positions, positions)
     h = h + A.attn_out(cfg, sp["attn"], ctx)

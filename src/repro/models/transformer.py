@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse_attention import PLAN_TABLE_KEYS
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -101,6 +102,9 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
     """batch: {'tokens': (B,S') [, 'patch_embeds': (B,P,d)]} -> logits (B,S,V).
 
     spion: None | {'col_idx': (Ly,nrb,K), 'nvalid': (Ly,nrb), 'block': int}
+           optionally + SparsityPlan transposed tables
+           {'row_idx': (Ly,ncb,KT*), 'nvalid_t': (Ly,ncb)} (sparse backward
+           grid sized to the true pattern width)
     capture: None | {'filt': (F,), 'block': int} -> also returns
              (Ly, S/B, S/B) pooled conv scores for pattern generation.
     """
@@ -122,7 +126,7 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
         return h, (cap, aux)
 
     if spion is not None:
-        sp_stacked = {"col_idx": spion["col_idx"], "nvalid": spion["nvalid"]}
+        sp_stacked = {k: spion[k] for k in PLAN_TABLE_KEYS if k in spion}
     else:
         sp_stacked = None
     h, (caps, auxs) = jax.lax.scan(body, h, (params["layers"], sp_stacked),

@@ -9,7 +9,8 @@ from hypothesis import given, strategies as st
 
 from repro.configs import get_config
 from repro.core.sparse_attention import (bcsr_attention, bcsr_from_blockmask,
-                                         bcsr_transpose)
+                                         bcsr_transpose, build_sparsity_plan,
+                                         host_transpose_tables)
 from repro.kernels import ref
 from repro.kernels.block_sparse_attn import fused_block_sparse_attention
 from repro.kernels.dispatch import default_interpret
@@ -214,6 +215,111 @@ def test_bcsr_transpose_jit_and_width_clamp():
     assert int(nvt[0]) == 4 and np.array_equal(np.asarray(row_idx)[0], [0, 1, 2, 3])
     ri2, nvt2 = bcsr_transpose(b.col_idx, b.nvalid, ncb=4, max_k=2)
     assert ri2.shape == (4, 2) and int(nvt2[0]) == 2
+
+
+@given(st.integers(0, 10_000), st.integers(1, 12), st.floats(0.05, 0.95))
+def test_host_plan_tables_match_under_jit_transpose(seed, n, density):
+    """Property: the host-built SparsityPlan transposed tables agree with the
+    under-jit bcsr_transpose output (valid prefixes + counts) for random
+    block masks, at the plan's true width KT*."""
+    r = np.random.default_rng(seed)
+    mask = r.random((n, n)) < density
+    np.fill_diagonal(mask, True)
+    b = bcsr_from_blockmask(mask, 8)
+    plan = build_sparsity_plan(b.col_idx, b.nvalid, 8, ncb=n)
+    kt = plan.kt_star
+    assert kt == int(mask.sum(axis=0).max())          # true column population
+    assert plan.tables["row_idx"].shape == (1, n, kt)
+    ri_jit, nvt_jit = jax.jit(
+        lambda c, v: bcsr_transpose(c, v, ncb=n, max_k=kt))(b.col_idx, b.nvalid)
+    ri = np.asarray(plan.tables["row_idx"])[0]
+    nvt = np.asarray(plan.tables["nvalid_t"])[0]
+    np.testing.assert_array_equal(nvt, np.asarray(nvt_jit))
+    ri_jit = np.asarray(ri_jit)
+    for c in range(n):
+        np.testing.assert_array_equal(ri[c, : nvt[c]], ri_jit[c, : nvt[c]])
+    # clamped padding stays in range (the kernels index with it)
+    assert ri.min() >= 0 and ri.max() < n
+
+
+def test_host_transpose_single_layer_and_pinned_width():
+    mask = np.zeros((4, 4), bool)
+    mask[:, 0] = True
+    mask[2, 3] = True
+    b = bcsr_from_blockmask(mask, 8)
+    ri, nvt, kt = host_transpose_tables(b.col_idx, b.nvalid, ncb=4)
+    assert kt == 4 and ri.shape == (4, 4)             # stripe -> population nrb
+    np.testing.assert_array_equal(ri[0], [0, 1, 2, 3])
+    ri2, nvt2, kt2 = host_transpose_tables(b.col_idx, b.nvalid, ncb=4, max_kt=2)
+    assert kt2 == 2 and ri2.shape == (4, 2) and int(nvt2[0]) == 2
+
+
+@pytest.mark.parametrize("S,hd,block,causal,sw,G", GRAD_SWEEP)
+def test_fused_vjp_plan_path_grads_vs_dense_ref(S, hd, block, causal, sw, G, rng):
+    """Same contract as test_fused_vjp_grads_vs_dense_ref, but the backward
+    consumes the host-built SparsityPlan transposed tables (dK/dV grid width
+    KT*) instead of rebuilding them under jit at width nrb."""
+    N = 2
+    n = S // block
+    q = jax.random.normal(jax.random.key(0), (N, G, S, hd))
+    k = jax.random.normal(jax.random.key(1), (N, S, hd))
+    v = jax.random.normal(jax.random.key(2), (N, S, hd))
+    b = _bcsr(rng, n, block)
+    col = jnp.maximum(b.col_idx, 0)
+    plan = build_sparsity_plan(b.col_idx, b.nvalid, block, ncb=n)
+    assert plan.tables["row_idx"].shape[-1] == plan.kt_star <= n
+    gout = jax.random.normal(jax.random.key(3), (N, G, S, hd))
+
+    def loss_plan(q, k, v):
+        o = fused_block_sparse_attention(
+            q, k, v, col, b.nvalid, block=block, causal=causal,
+            sliding_window=sw, interpret=True,
+            row_idx=plan.tables["row_idx"][0],
+            nvalid_t=plan.tables["nvalid_t"][0])
+        return jnp.sum(o * gout)
+
+    def loss_ref(q, k, v):
+        o = jnp.stack([ref.fused_ref(q[:, g], k, v, b.col_idx, block=block,
+                                     causal=causal, sliding_window=sw)
+                       for g in range(G)], axis=1)
+        return jnp.sum(o * gout)
+
+    got = jax.grad(loss_plan, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, w in zip("qkv", got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w), atol=1e-3,
+                                   err_msg=f"d{name} mismatch (plan path)")
+
+
+def test_plan_path_grads_equal_fallback_path():
+    """Plan-built and under-jit transposed tables must give IDENTICAL dk/dv
+    (same accumulation order over ascending row-blocks, fewer grid steps)."""
+    S, hd, block = 128, 16, 16
+    n = S // block
+    rng = np.random.default_rng(5)
+    # skewed: sliding-window-ish mask where KT* < nrb
+    mask = np.zeros((n, n), bool)
+    for r in range(n):
+        mask[r, max(r - 1, 0): r + 1] = True
+    b = bcsr_from_blockmask(mask, block)
+    plan = build_sparsity_plan(b.col_idx, b.nvalid, block, ncb=n)
+    assert plan.kt_star < n
+    col = jnp.maximum(b.col_idx, 0)
+    q = jax.random.normal(jax.random.key(0), (2, 1, S, hd))
+    k = jax.random.normal(jax.random.key(1), (2, S, hd))
+    v = jax.random.normal(jax.random.key(2), (2, S, hd))
+
+    def loss(q, k, v, use_plan):
+        o = fused_block_sparse_attention(
+            q, k, v, col, b.nvalid, block=block, causal=True, interpret=True,
+            row_idx=plan.tables["row_idx"][0] if use_plan else None,
+            nvalid_t=plan.tables["nvalid_t"][0] if use_plan else None)
+        return jnp.sum(o ** 2)
+
+    g_plan = jax.grad(lambda *a: loss(*a, True), argnums=(0, 1, 2))(q, k, v)
+    g_base = jax.grad(lambda *a: loss(*a, False), argnums=(0, 1, 2))(q, k, v)
+    for a, w in zip(g_plan, g_base):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w), atol=1e-6)
 
 
 def test_default_interpret_resolves_platform():
