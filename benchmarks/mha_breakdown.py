@@ -1,8 +1,12 @@
 """Fig. 6: breakdown of MHA operation times — dense GEMM/softmax/GEMM vs
 sparse SDDMM/sparse-softmax/SpMM — plus the `train_step` mode that times
-forward+backward now that the fused kernel has a sparse backward, and the
+forward+backward now that the fused kernel has a sparse backward, the
 `bwd` mode that separates the dQ vs dK/dV backward kernels and proves the
-SparsityPlan shrinks the dK/dV grid to the true pattern width KT*.
+SparsityPlan shrinks the dK/dV grid to the true pattern width KT*, and the
+`sharded` mode that runs the sparse train step on a 4-virtual-device
+(data=2, model=2) mesh in a subprocess and records jnp-vs-shard_map-fused
+rows — proving the mesh-aware dispatch keeps the Pallas kernel (and its
+sparse backward) on multi-device meshes.
 
 CPU wall-times of the jitted jnp paths (the GPU numbers in the paper are
 hardware-specific; the *structure* — softmax dominating dense MHA, every
@@ -164,6 +168,96 @@ def bwd_rows(out, L=256, block=16, smoke=False):
         f"speedup={t_pad / t_plan:.2f}x")
 
 
+# Child program for the `sharded` mode: jax locks the host device count at
+# first init, so the 4-virtual-device mesh needs a fresh process (same
+# pattern as tests/test_distributed.py). Sizes come in via SPION_BENCH_*.
+_SHARDED_CHILD = r"""
+import dataclasses, os, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.distributed.sharding import mesh_context
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_train_step, spion_dryrun_tables
+from repro.models.registry import build
+from repro.optim import adamw_init
+
+L = int(os.environ["SPION_BENCH_L"])
+B = int(os.environ["SPION_BENCH_B"])
+reps = int(os.environ["SPION_BENCH_REPS"])
+mesh = make_mesh((2, 2), ("data", "model"))
+cfg = get_config("spion-lra").reduced()
+cfg = cfg.replace(num_heads=4, num_kv_heads=2, head_dim=16,
+                  spion=dataclasses.replace(cfg.spion, block_size=16))
+bundle = build(cfg)
+params = jax.tree_util.tree_map(
+    lambda x: x.astype(jnp.float32) if x.ndim >= 2 else x,
+    bundle.init(jax.random.key(0)))
+opt = adamw_init(params)
+rng = np.random.default_rng(0)
+raw = rng.integers(0, cfg.vocab_size, (B, L + 1))
+batch = {"tokens": jnp.asarray(raw[:, :-1]), "labels": jnp.asarray(raw[:, 1:])}
+tables = spion_dryrun_tables(cfg, L)
+
+def timed(step):
+    args = (params, opt, batch, jnp.int32(0), tables)
+    jax.block_until_ready(step(*args)[2]["loss"])          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(step(*args)[2]["loss"])
+    return (time.perf_counter() - t0) / reps * 1e6
+
+with mesh_context(mesh):
+    auto_step = make_train_step(cfg, spion=True, sparse_kernel="auto")
+    jaxpr = str(jax.make_jaxpr(auto_step)(params, opt, batch, jnp.int32(0),
+                                          tables))
+    assert "shard_map" in jaxpr and "pallas_call" in jaxpr, \
+        "auto must resolve to the shard_map-fused kernel under the mesh"
+    t_jnp = timed(jax.jit(make_train_step(cfg, spion=True,
+                                          sparse_kernel="jnp")))
+    t_fused = timed(jax.jit(auto_step))
+print("ROW,sharded.auto_is_shard_map_fused,1,"
+      "auto train-step jaxpr has shard_map+pallas_call (mesh data=2 model=2)")
+print(f"ROW,sharded.train_step_jnp_us,{t_jnp:.1f},"
+      "jnp BCSR gather path under GSPMD (4 virtual cpu devices)")
+print(f"ROW,sharded.train_step_fused_us,{t_fused:.1f},"
+      "shard_map-fused (Pallas interpreter on CPU: records the dispatch + "
+      f"trajectory; TPU numbers are the speedup claim) jnp/fused="
+      f"{t_jnp / t_fused:.2f}x")
+"""
+
+
+def sharded_rows(out, smoke=False):
+    """`sharded` mode: before/after train-step rows (jnp BCSR vs
+    shard_map-fused) on a (data=2, model=2) virtual mesh. Runs in a
+    subprocess because the fake device count must be set before jax
+    initialises. On CPU the fused numbers go through the Pallas interpreter
+    — the row pair documents the mesh dispatch and gives the trajectory a
+    before/after anchor, not a CPU speedup claim."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+           "SPION_BENCH_L": "128" if smoke else "256",
+           "SPION_BENCH_B": "4",
+           "SPION_BENCH_REPS": "2" if smoke else "5"}
+    r = subprocess.run([sys.executable, "-c", _SHARDED_CHILD],
+                       capture_output=True, text=True, cwd=root, env=env,
+                       timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded bench child failed:\n{r.stderr[-2000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, value, derived = line.split(",", 3)
+            out(name, float(value), derived)
+
+
 def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
     """fwd+bwd timings: the training-speed claim, not the inference one."""
     import dataclasses
@@ -208,9 +302,10 @@ def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
         f"speedup={t_dense / t_sparse:.2f}x density={density}")
 
     if jax.default_backend() == "tpu":
-        from repro.kernels.ops import _split_heads
+        from repro.kernels.ops import _flatten_bk, _split_heads
         col = jnp.maximum(bcsr.col_idx, 0)
-        qh, kh, vh, _ = _split_heads(q, k, v)
+        qs, ks, vs, dims = _split_heads(q, k, v)
+        qh, kh, vh = _flatten_bk(qs, ks, vs, dims)
 
         def fused_loss(q, k, v):
             o = fused_block_sparse_attention(q, k, v, col, bcsr.nvalid,

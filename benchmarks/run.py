@@ -12,6 +12,9 @@ perf history that CI uploads as an artifact.
                    incl. SparsityPlan vs per-step-transpose before/after
   bwd              dQ vs dK/dV backward-kernel split; asserts the dK/dV
                    grid width equals the SparsityPlan's KT*
+  sharded          sparse train step on a 4-virtual-device (data x model)
+                   mesh: jnp BCSR vs shard_map-fused before/after rows
+                   (subprocess; proves "auto" keeps the kernel on meshes)
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
@@ -61,13 +64,16 @@ def _mods(smoke):
         rows=functools.partial(mha_breakdown.train_step_rows, smoke=smoke))
     bwd = SimpleNamespace(
         rows=functools.partial(mha_breakdown.bwd_rows, smoke=smoke))
+    sharded = SimpleNamespace(
+        rows=functools.partial(mha_breakdown.sharded_rows, smoke=smoke))
     if smoke:
         breakdown = SimpleNamespace(
             rows=functools.partial(mha_breakdown.rows, L=256))
         return [("opcount", opcount), ("mha_breakdown", breakdown),
-                ("train_step", train_step), ("bwd", bwd)]
+                ("train_step", train_step), ("bwd", bwd),
+                ("sharded", sharded)]
     return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
-            ("train_step", train_step), ("bwd", bwd),
+            ("train_step", train_step), ("bwd", bwd), ("sharded", sharded),
             ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),
             ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]

@@ -104,6 +104,51 @@ def constrain(x, *spec):
 
 
 # ---------------------------------------------------------------------------
+# Fused sparse-attention kernel sharding (shard_map axis choice)
+# ---------------------------------------------------------------------------
+
+def kernel_shard_axes(mesh: Mesh, batch: int, kv_heads: int):
+    """Mesh axes for the fused kernel's shard_map: (batch_axes, kv_axis).
+
+    The kernel's natural grid axis is B*KV; the shard boundary must fall on
+    a meshable dim, so the wrapper keeps B and KV separate and shards
+      - batch over the data axes ('pod','data'), greedily keeping every axis
+        whose size still divides the batch exactly (shard_map admits no
+        padding, unlike with_sharding_constraint);
+      - KV heads over 'model' when KV % |model| == 0, else KV stays
+        replicated (batch-only sharding — the clean GQA fallback).
+    Returns (tuple-or-None, 'model'-or-None); both None means nothing
+    shards and the caller should not use the wrapper (replicated kernel
+    work on every device is never the right dispatch).
+    """
+    acc, chosen = 1, []
+    for a in data_axes(mesh):
+        if mesh.shape[a] > 1 and batch % (acc * mesh.shape[a]) == 0:
+            chosen.append(a)
+            acc *= mesh.shape[a]
+    baxes = tuple(chosen) if chosen else None
+    model = mesh.shape.get("model", 1)
+    kv_ax = "model" if model > 1 and kv_heads % model == 0 else None
+    return baxes, kv_ax
+
+
+def kernel_pspecs_from_axes(baxes, kv_ax):
+    """(qspec, kvspec, table_spec) for chosen kernel shard axes — the single
+    source of the shard_map wrapper's spec layout (kernels/sharded.py uses
+    this; keep it in lockstep with ops._split_heads's (B,KV,G,S,hd))."""
+    return (P(baxes, kv_ax, None, None, None),
+            P(baxes, kv_ax, None, None), P())
+
+
+def kernel_pspecs(mesh: Mesh, batch: int, kv_heads: int):
+    """PartitionSpecs for the shard_map'd fused kernel: q (B,KV,G,S,hd),
+    k/v (B,KV,S,hd), and the BCSR/SparsityPlan tables. The tables index the
+    full, unsharded sequence axis (every shard streams any KV tile its rows
+    reference), so they replicate per shard — they are kilobytes."""
+    return kernel_pspecs_from_axes(*kernel_shard_axes(mesh, batch, kv_heads))
+
+
+# ---------------------------------------------------------------------------
 # Parameter sharding rules (path-name driven)
 # ---------------------------------------------------------------------------
 

@@ -46,7 +46,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparse_attention import bcsr_transpose
-from repro.kernels.dispatch import default_interpret
+from repro.distributed.sharding import current_mesh
+from repro.kernels.dispatch import default_interpret, in_sharded_body
 
 NEG = -1e30
 
@@ -390,7 +391,22 @@ def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
     to the measured pattern — and no bcsr_transpose runs under jit. Without
     them the backward falls back to the under-jit transpose at the
     always-safe width KT = nrb.
+
+    Single-shard op: under a multi-device mesh it must run inside the
+    shard_map wrapper (kernels/sharded.py) — pallas_call has no GSPMD
+    partitioning rule, so a bare call would be silently replicated on every
+    device. That misuse fails loudly here instead.
     """
+    mesh = current_mesh()
+    if mesh is not None and mesh.size > 1 and not in_sharded_body():
+        raise RuntimeError(
+            f"fused_block_sparse_attention called under a multi-device mesh "
+            f"{dict(mesh.shape)} outside the shard_map wrapper: pallas_call "
+            f"has no GSPMD partitioning rule, so the kernel would run fully "
+            f"replicated on every device. Route the call through "
+            f"kernels.ops.spion_attention_kernel (mesh-aware) or "
+            f"kernels.sharded.sharded_fused_attention, or use the jnp BCSR "
+            f"path (cfg.spion.kernel='jnp').")
     op = _fused_op(int(block), bool(causal),
                    None if sliding_window is None else int(sliding_window),
                    default_interpret(interpret), row_idx is not None)

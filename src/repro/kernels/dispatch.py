@@ -4,12 +4,39 @@
 platform": Pallas kernels compile through Mosaic on TPU and fall back to the
 pure-Python interpreter elsewhere (CPU CI, dev laptops), so the same call
 sites run unchanged on both. Pass an explicit bool to override.
+
+Also home of the shard_map-body marker: `pallas_call` has no GSPMD
+partitioning rule, so under a multi-device mesh the fused kernel is only
+correct inside the shard_map wrapper (kernels/sharded.py). The wrapper
+flags its body trace with `sharded_body()`; `fused_block_sparse_attention`
+checks `in_sharded_body()` and fails loudly instead of letting GSPMD run
+the kernel fully replicated on every device. (Lives here, not in
+sharded.py, to keep block_sparse_attn <-> sharded import-acyclic.)
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
 
 import jax
+
+_IN_SHARDED_BODY: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_in_sharded_kernel_body", default=False)
+
+
+@contextlib.contextmanager
+def sharded_body():
+    """Mark the current (trace-time) scope as inside the shard_map wrapper."""
+    tok = _IN_SHARDED_BODY.set(True)
+    try:
+        yield
+    finally:
+        _IN_SHARDED_BODY.reset(tok)
+
+
+def in_sharded_body() -> bool:
+    return _IN_SHARDED_BODY.get()
 
 
 @functools.lru_cache(maxsize=1)

@@ -10,8 +10,21 @@ see block_sparse_attn.py) — it is the path the sparse training phase runs
 through. The 3-kernel pipeline stays forward-only (it exists to reproduce
 the paper's Fig. 6 breakdown, not to train).
 
+Mesh-aware: under an active multi-device mesh (distributed.sharding.
+current_mesh()) the fused path routes through the shard_map wrapper
+(kernels/sharded.py) — batch shards over the data axes, KV heads over
+'model' when divisible — so sparse training keeps the kernel on pods.
+pallas_call has no GSPMD partitioning rule, so the only alternatives under
+a mesh are the jnp BCSR path or silently replicated kernel work; the
+latter fails loudly (block_sparse_attn guard).
+
 interpret=None resolves from the platform: compiled on TPU, Pallas
 interpreter on CPU (CI) — the same call sites work on both.
+
+The jits here are keyed ONLY on the kernel statics (causal, sliding_window,
+block, fused, interpret) — never on the whole ModelConfig, so unrelated
+config changes (act_shard, bench sweeps, dtype knobs) don't retrace the
+kernel.
 """
 from __future__ import annotations
 
@@ -20,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import current_mesh
 from repro.kernels.block_sparse_attn import fused_block_sparse_attention
 from repro.kernels.dispatch import default_interpret
 from repro.kernels.sddmm import sddmm
@@ -34,43 +48,70 @@ def _prep_tables(bcsr):
 
 
 def _split_heads(q, k, v):
-    """(B,S,H,hd)x(B,S,KV,hd) -> q (B*KV, G, S, hd), k/v (B*KV, S, hd)."""
+    """(B,S,H,hd)x(B,S,KV,hd) -> q (B, KV, G, S, hd), k/v (B, KV, S, hd).
+
+    B and KV stay separate leading axes so the sharded dispatch can put the
+    shard boundary on meshable dims (batch over the data axes, KV heads over
+    'model'); the kernels' flat B*KV leading axis is formed shard-locally
+    (or in _flatten_bk for the single-shard path)."""
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
-    qh = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4).reshape(B * KV, G, S, hd)
-    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
-    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    qh = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
     return qh, kh, vh, (B, S, H, hd, KV, G)
 
 
-def _merge_heads(o, dims):
+def _flatten_bk(qh, kh, vh, dims):
     B, S, H, hd, KV, G = dims
-    return o.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    return (qh.reshape(B * KV, G, S, hd), kh.reshape(B * KV, S, hd),
+            vh.reshape(B * KV, S, hd))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block", "fused", "interpret"))
-def _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, *, cfg, block, fused,
-              interpret):
-    causal = cfg.causal
-    sw = cfg.sliding_window
+def _merge_heads(o, dims):
+    """(B, KV, G, S, hd) -> (B, S, H, hd)."""
+    B, S, H, hd, KV, G = dims
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block", "fused", "interpret"))
+def _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, *, causal,
+              sliding_window, block, fused, interpret):
     qh, kh, vh, dims = _split_heads(q, k, v)
+    B, S, H, hd, KV, G = dims
+    qf, kf, vf = _flatten_bk(qh, kh, vh, dims)
     if fused:
-        o = fused_block_sparse_attention(qh, kh, vh, col, nvalid, block=block,
-                                         causal=causal, sliding_window=sw,
+        o = fused_block_sparse_attention(qf, kf, vf, col, nvalid, block=block,
+                                         causal=causal,
+                                         sliding_window=sliding_window,
                                          interpret=interpret,
                                          row_idx=row_idx, nvalid_t=nvalid_t)
-        return _merge_heads(o, dims)
-    B, S, H, hd, KV, G = dims
-    qf = qh.reshape(B * KV * G, S, hd)
-    kf = jnp.repeat(kh, G, axis=0) if G > 1 else kh
-    vf = jnp.repeat(vh, G, axis=0) if G > 1 else vh
-    s = sddmm(qf, kf, col, nvalid, block=block, causal=causal,
-              sliding_window=sw, interpret=interpret)
+        return _merge_heads(o.reshape(B, KV, G, S, hd), dims)
+    qff = qf.reshape(B * KV * G, S, hd)
+    kff = jnp.repeat(kf, G, axis=0) if G > 1 else kf
+    vff = jnp.repeat(vf, G, axis=0) if G > 1 else vf
+    s = sddmm(qff, kff, col, nvalid, block=block, causal=causal,
+              sliding_window=sliding_window, interpret=interpret)
     p = sparse_softmax(s, col, nvalid, block=block, seq_len=S, causal=causal,
-                       sliding_window=sw, interpret=interpret)
-    o = spmm(p, vf, col, nvalid, block=block, interpret=interpret)
-    return _merge_heads(o.reshape(B * KV, G, S, hd), dims)
+                       sliding_window=sliding_window, interpret=interpret)
+    o = spmm(p, vff, col, nvalid, block=block, interpret=interpret)
+    return _merge_heads(o.reshape(B, KV, G, S, hd), dims)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "causal",
+                                             "sliding_window", "block",
+                                             "interpret"))
+def _dispatch_sharded(q, k, v, col, nvalid, row_idx, nvalid_t, *, mesh,
+                      causal, sliding_window, block, interpret):
+    from repro.kernels.sharded import sharded_fused_attention
+    qh, kh, vh, dims = _split_heads(q, k, v)
+    o = sharded_fused_attention(mesh, qh, kh, vh, col, nvalid, block=block,
+                                causal=causal, sliding_window=sliding_window,
+                                interpret=interpret, row_idx=row_idx,
+                                nvalid_t=nvalid_t)
+    return _merge_heads(o, dims)
 
 
 def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None,
@@ -79,8 +120,26 @@ def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None,
     With fused=True the result is differentiable (sparse backward kernels).
     `row_idx`/`nvalid_t` are a SparsityPlan's precomputed transposed tables
     (width KT*); supplying them shrinks the dK/dV backward grid to the true
-    pattern width and removes the per-step under-jit bcsr_transpose."""
+    pattern width and removes the per-step under-jit bcsr_transpose.
+
+    Under an active multi-device mesh the fused path runs through the
+    shard_map wrapper; the 3-kernel pipeline (fused=False, forward-only) has
+    no sharded form and fails loudly there."""
     col, nvalid = _prep_tables(bcsr)
-    return _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, cfg=cfg,
-                     block=bcsr.block, fused=fused,
-                     interpret=default_interpret(interpret))
+    interp = default_interpret(interpret)
+    mesh = current_mesh()
+    if mesh is not None and mesh.size > 1:
+        if not fused:
+            raise RuntimeError(
+                "spion_attention_kernel(fused=False): the 3-kernel pipeline "
+                "is forward-only and has no shard_map wrapper; under a "
+                f"multi-device mesh {dict(mesh.shape)} it would run "
+                "replicated on every device. Use fused=True (sharded) or "
+                "the jnp BCSR path.")
+        return _dispatch_sharded(q, k, v, col, nvalid, row_idx, nvalid_t,
+                                 mesh=mesh, causal=cfg.causal,
+                                 sliding_window=cfg.sliding_window,
+                                 block=bcsr.block, interpret=interp)
+    return _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t,
+                     causal=cfg.causal, sliding_window=cfg.sliding_window,
+                     block=bcsr.block, fused=fused, interpret=interp)

@@ -1,0 +1,103 @@
+"""Mesh-aware dispatch: the fused block-sparse attention kernel under
+shard_map.
+
+`pallas_call` has no GSPMD partitioning rule, so under a multi-device mesh
+the fused kernel (and its custom-VJP backward kernels) would either fail or
+run fully replicated on every device. This wrapper makes the kernel
+mesh-native instead:
+
+  - the kernel's leading B*KV grid axis is split back into (B, KV) so the
+    shard boundary falls on meshable dims: batch shards over the data axes
+    ('pod','data'), KV heads over 'model' when KV % |model| == 0, with a
+    clean fallback to batch-only sharding otherwise
+    (distributed.sharding.kernel_shard_axes);
+  - the BCSR + SparsityPlan tables replicate per shard (in_spec P()) — they
+    index the full, unsharded sequence axis, and they are kilobytes;
+  - the body flattens (B_loc, KV_loc) -> N_loc = B_loc*KV_loc shard-locally
+    and calls the unchanged `fused_block_sparse_attention` custom_vjp, so
+    `jax.grad` of the wrapped op differentiates straight through the
+    shard_map: partial-eval splits it into a forward and a backward
+    shard_map, and the custom-VJP residuals (q/k/v/tables/o/LSE) flow
+    between them as shard-local values — no gather of the (N, G, S)
+    log-sum-exp to the host program, no resharding of the backward.
+
+Every grid cell is independent across N = B*KV (the tables are shared by
+all batch entries and heads), so sharding the leading axis changes nothing
+about the math: the sharded forward is bitwise-identical to the
+single-device kernel on each shard's rows (tested).
+
+check_rep=False for the same reason as distributed/collectives.py: the
+replicated table inputs plus a custom_vjp body defeat shard_map's
+replication checker.
+"""
+from __future__ import annotations
+
+import functools
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import (kernel_pspecs_from_axes,
+                                        kernel_shard_axes)
+from repro.kernels.block_sparse_attn import fused_block_sparse_attention
+from repro.kernels.dispatch import default_interpret, sharded_body
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_op(mesh: Mesh, baxes, kv_ax, block, causal, sliding_window,
+                interpret, with_plan):
+    """One shard_map-wrapped fused op per (mesh, axes, static kernel config)
+    — cached so repeated traces reuse the same callable (and the custom_vjp
+    identity under it stays stable, mirroring block_sparse_attn._fused_op)."""
+    qspec, kvspec, rep = kernel_pspecs_from_axes(baxes, kv_ax)
+    n_tables = 4 if with_plan else 2
+
+    def body(q, k, v, col_idx, nvalid, *plan):
+        with sharded_body():
+            B, KV, G, S, hd = q.shape  # shard-LOCAL sizes
+            row_idx, nvalid_t = plan if with_plan else (None, None)
+            o = fused_block_sparse_attention(
+                q.reshape(B * KV, G, S, hd), k.reshape(B * KV, S, hd),
+                v.reshape(B * KV, S, hd), col_idx, nvalid, block=block,
+                causal=causal, sliding_window=sliding_window,
+                interpret=interpret, row_idx=row_idx, nvalid_t=nvalid_t)
+            return o.reshape(B, KV, G, S, hd)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(qspec, kvspec, kvspec) + (rep,) * n_tables,
+                     out_specs=qspec, check_rep=False)
+
+
+def sharded_fused_attention(mesh: Mesh, q, k, v, col_idx, nvalid, *, block,
+                            causal=False, sliding_window=None, interpret=None,
+                            row_idx=None, nvalid_t=None):
+    """shard_map'd `fused_block_sparse_attention` over `mesh`.
+
+    q (B, KV, G, S, hd); k, v (B, KV, S, hd) — batch and KV heads as
+    separate leading axes (ops._split_heads layout); tables as in
+    `fused_block_sparse_attention`; interpret=None resolves from the
+    platform (kernels/dispatch.py). Returns (B, KV, G, S, hd).
+
+    Differentiable end-to-end: jax.grad flows through the shard_map into the
+    custom-VJP Pallas backward kernels, each shard running its own dQ/dK/dV
+    grids over its local rows. Raises when no mesh axis can shard the
+    kernel (batch indivisible by the data axes AND KV indivisible by
+    'model') — running the kernel replicated on every device is never the
+    intended dispatch; use the jnp path there instead.
+    """
+    B, KV = q.shape[0], q.shape[1]
+    baxes, kv_ax = kernel_shard_axes(mesh, B, KV)
+    if baxes is None and kv_ax is None:
+        raise RuntimeError(
+            f"sharded_fused_attention: no mesh axis shards the kernel on "
+            f"mesh {dict(mesh.shape)} — batch={B} is indivisible by the data "
+            f"axes and kv_heads={KV} by 'model'. The shard_map would run the "
+            f"full kernel replicated on every device; use kernel='jnp' (the "
+            f"GSPMD path) or fix the batch/head divisibility.")
+    op = _sharded_op(mesh, baxes, kv_ax, int(block), bool(causal),
+                     None if sliding_window is None else int(sliding_window),
+                     default_interpret(interpret), row_idx is not None)
+    args = (q, k, v, col_idx, nvalid)
+    if row_idx is not None:
+        args += (row_idx, nvalid_t)
+    return op(*args)

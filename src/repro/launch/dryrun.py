@@ -292,6 +292,18 @@ def run_cell(arch, shape_name, multi_pod, mode, outdir, verbose=True,
         with mesh_context(mesh):
             # 1) full config, rolled scans: the compile-proof + memory analysis
             n_micro = choose_n_micro(cfg, shape, mesh)
+            # sparse cells record which kernel "auto" resolves to under THIS
+            # mesh (shard_map-fused vs jnp). The dispatch sees the MICRO
+            # batch (the kernel is traced inside the grad-accumulation
+            # scan), so resolve with global_batch // n_micro — resolving
+            # with the global batch could claim "fused" for a cell whose
+            # step actually dispatched jnp.
+            sparse_kernel = None
+            if mode == "sparse":
+                from repro.models.attention import resolve_sparse_kernel
+                sparse_kernel = resolve_sparse_kernel(
+                    cfg, max(shape.global_batch // n_micro, 1),
+                    cfg.num_kv_heads)
             compiled_full = compile_cell(cfg.replace(scan_unroll=1), shape, mesh,
                                          mode, n_micro=n_micro)
             t_full = time.time() - t0
@@ -299,6 +311,7 @@ def run_cell(arch, shape_name, multi_pod, mode, outdir, verbose=True,
             rec = {"cell": cellname, "status": "ok", "arch": arch,
                    "shape": shape_name, "mesh": "multi" if multi_pod else "single",
                    "mode": mode, "chips": chips, "n_micro": n_micro,
+                   "sparse_kernel": sparse_kernel,
                    "t_compile_full_s": round(t_full, 1),
                    "params": cfg.param_count(),
                    "active_params": cfg.active_param_count(),

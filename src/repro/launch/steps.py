@@ -114,7 +114,14 @@ def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = 
 
 def spion_table_pspecs(tables):
     """Replicated specs for every array leaf; None for static ints
-    (block / kt_star) — the plan tables are kilobytes, broadcast whole."""
+    (block / kt_star) — the plan tables are kilobytes, broadcast whole.
+
+    Replication is load-bearing, not just cheap: under a multi-device mesh
+    the fused kernel runs inside a shard_map whose table in_specs are P()
+    (kernels/sharded.py) — the tables index the full, unsharded sequence
+    axis, so every shard needs the whole table. Feeding them in already
+    replicated means the shard_map boundary is a no-op instead of an
+    all-gather."""
     return {k: (P() if hasattr(v, "shape") else None)
             for k, v in tables.items()}
 
@@ -138,7 +145,11 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
 
     `sparse_kernel` overrides cfg.spion.kernel ("auto" | "jnp" | "fused"):
     the sparse phase differentiates end-to-end through either path — the
-    fused Pallas kernel carries its own sparse backward (custom VJP)."""
+    fused Pallas kernel carries its own sparse backward (custom VJP). The
+    dispatch is mesh-aware: traced under an active multi-device mesh
+    (mesh_context), "auto"/"fused" route through the shard_map wrapper so
+    the kernel and its backward stay sharded on pods
+    (models.attention.resolve_sparse_kernel)."""
     if sparse_kernel is not None:
         cfg = cfg.replace(spion=dataclasses_replace(cfg.spion,
                                                     kernel=sparse_kernel))

@@ -2,7 +2,9 @@
 pattern-capture path that streams pooled diagonal-conv scores without ever
 materialising the L x L attention matrix (DESIGN.md §2), and the sparse-phase
 dispatch (`spion_sparse_attention`) that routes the BCSR tables either to the
-pure-jnp gather path or the fused differentiable Pallas kernel.
+pure-jnp gather path or the fused differentiable Pallas kernel — mesh-aware:
+under a multi-device mesh the fused path runs through the shard_map wrapper
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -13,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse_attention import BCSR, bcsr_attention
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, current_mesh
 from repro.models.layers import _he, linear, rope
 
 
@@ -125,6 +127,37 @@ def dense_attention(cfg, q, k, v, q_pos, k_pos):
     return out
 
 
+def resolve_sparse_kernel(cfg, batch: int, kv_heads: int) -> str:
+    """What `cfg.spion.kernel` dispatches to at trace time ("fused"/"jnp").
+
+    Mesh-aware: under an active multi-device mesh (distributed.sharding.
+    current_mesh()) "auto" picks the shard_map-wrapped fused kernel whenever
+    at least one kernel dim shards — batch over the data axes, KV heads
+    over 'model' (kernel_shard_axes) — so sparse training keeps the Pallas
+    kernel and its sparse backward on pods instead of reverting to jnp
+    gathers. This mesh branch is deliberately NOT gated on the TPU backend:
+    CI's virtual-device meshes and the dry-run must exercise the exact
+    production dispatch (shard_map + kernel), accepting the Pallas
+    interpreter's speed off-TPU — a real multi-host CPU/GPU deployment that
+    wants wall-clock should force kernel="jnp". When nothing divides, or
+    with no mesh on a non-TPU backend, "auto" falls back to the jnp BCSR
+    path (the GSPMD-compatible gather stand-in). Exposed separately so
+    dry-runs and tests can record the resolution without tracing a step."""
+    impl = getattr(cfg.spion, "kernel", "auto")
+    if impl != "auto":
+        return impl
+    mesh = current_mesh()
+    if mesh is not None and mesh.size > 1:
+        from repro.distributed.sharding import kernel_shard_axes
+        baxes, kv_ax = kernel_shard_axes(mesh, batch, kv_heads)
+        return "fused" if (baxes or kv_ax) else "jnp"
+    # meshless: the fused kernel compiles through Mosaic only on TPU; with
+    # multiple devices but no mesh there is nothing to shard over, so stay
+    # on the jnp path (jit places it on the default device either way)
+    on_tpu = jax.default_backend() == "tpu" and jax.device_count() == 1
+    return "fused" if on_tpu else "jnp"
+
+
 def spion_sparse_attention(cfg, q, k, v, spion_layer):
     """Sparse-phase attention for one layer's BCSR tables.
 
@@ -133,22 +166,19 @@ def spion_sparse_attention(cfg, q, k, v, spion_layer):
     precomputed transposed tables {'row_idx': (ncb, KT*), 'nvalid_t': (ncb,)}
     — the fused kernel's dK/dV backward grid then shrinks to the true
     pattern width KT* and the per-step under-jit bcsr_transpose disappears.
-    Dispatch follows cfg.spion.kernel: "auto" -> the fused differentiable
-    Pallas kernel on TPU, the pure-jnp BCSR path elsewhere; "fused"/"jnp"
-    force one. Both paths train — the fused kernel's backward is sparse too
-    (kernels/block_sparse_attn.py), which is what makes the sparse phase's
-    speedup honest for training, not just inference.
+    Dispatch follows cfg.spion.kernel (see `resolve_sparse_kernel`): "auto"
+    is mesh-aware — the fused differentiable Pallas kernel on single-device
+    TPU AND, via the shard_map wrapper, under multi-device meshes whose
+    axes divide the kernel dims; the pure-jnp BCSR path otherwise.
+    "fused"/"jnp" force one (forcing "fused" under a mesh still routes
+    through the shard_map wrapper; a bare kernel call there fails loudly —
+    kernels/block_sparse_attn.py). Both paths train — the fused kernel's
+    backward is sparse too, which is what makes the sparse phase's speedup
+    honest for training, not just inference.
     """
     bcsr = BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
                 spion_layer["block"], q.shape[1])
-    impl = getattr(cfg.spion, "kernel", "auto")
-    if impl == "auto":
-        # fused only on single-device TPU: pallas_call has no GSPMD
-        # partitioning rule, so under a sharded mesh "auto" stays on the jnp
-        # path (its docstring calls it the GSPMD-compatible stand-in).
-        # `kernel="fused"` still forces the kernel, e.g. under shard_map.
-        on_tpu = jax.default_backend() == "tpu" and jax.device_count() == 1
-        impl = "fused" if on_tpu else "jnp"
+    impl = resolve_sparse_kernel(cfg, q.shape[0], k.shape[2])
     if impl == "fused":
         from repro.kernels.ops import spion_attention_kernel
         return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True,
