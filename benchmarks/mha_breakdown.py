@@ -6,7 +6,9 @@ SparsityPlan shrinks the dK/dV grid to the true pattern width KT*, and the
 `sharded` mode that runs the sparse train step on a 4-virtual-device
 (data=2, model=2) mesh in a subprocess and records jnp-vs-shard_map-fused
 rows — proving the mesh-aware dispatch keeps the Pallas kernel (and its
-sparse backward) on multi-device meshes.
+sparse backward) on multi-device meshes — and the `seqshard` mode doing
+the same on a (seq=2, data=2) mesh for the sequence-parallel
+halo-exchange dispatch (DESIGN.md §10).
 
 CPU wall-times of the jitted jnp paths (the GPU numbers in the paper are
 hardware-specific; the *structure* — softmax dominating dense MHA, every
@@ -227,13 +229,10 @@ print(f"ROW,sharded.train_step_fused_us,{t_fused:.1f},"
 """
 
 
-def sharded_rows(out, smoke=False):
-    """`sharded` mode: before/after train-step rows (jnp BCSR vs
-    shard_map-fused) on a (data=2, model=2) virtual mesh. Runs in a
-    subprocess because the fake device count must be set before jax
-    initialises. On CPU the fused numbers go through the Pallas interpreter
-    — the row pair documents the mesh dispatch and gives the trajectory a
-    before/after anchor, not a CPU speedup claim."""
+def _subprocess_rows(out, child, smoke):
+    """Run a bench child on 4 fake host devices and collect its ROW lines
+    (jax locks the device count at first init, so meshes that differ from
+    the parent's need a fresh process)."""
     import os
     import pathlib
     import subprocess
@@ -247,15 +246,104 @@ def sharded_rows(out, smoke=False):
            "SPION_BENCH_L": "128" if smoke else "256",
            "SPION_BENCH_B": "4",
            "SPION_BENCH_REPS": "2" if smoke else "5"}
-    r = subprocess.run([sys.executable, "-c", _SHARDED_CHILD],
+    r = subprocess.run([sys.executable, "-c", child],
                        capture_output=True, text=True, cwd=root, env=env,
                        timeout=900)
     if r.returncode != 0:
-        raise RuntimeError(f"sharded bench child failed:\n{r.stderr[-2000:]}")
+        raise RuntimeError(f"bench child failed:\n{r.stderr[-2000:]}")
     for line in r.stdout.splitlines():
         if line.startswith("ROW,"):
             _, name, value, derived = line.split(",", 3)
             out(name, float(value), derived)
+
+
+def sharded_rows(out, smoke=False):
+    """`sharded` mode: before/after train-step rows (jnp BCSR vs
+    shard_map-fused) on a (data=2, model=2) virtual mesh. Runs in a
+    subprocess because the fake device count must be set before jax
+    initialises. On CPU the fused numbers go through the Pallas interpreter
+    — the row pair documents the mesh dispatch and gives the trajectory a
+    before/after anchor, not a CPU speedup claim."""
+    _subprocess_rows(out, _SHARDED_CHILD, smoke)
+
+
+# Child program for the `seqshard` mode: sparse train step on a
+# (seq=2, data=2) virtual mesh — the sequence-parallel dispatch
+# (DESIGN.md §10). Rows record the pattern halo, assert the ppermute halo
+# exchange is in the step, and time the jnp path vs the seq-sharded fused
+# kernel (Pallas interpreter on CPU: dispatch + trajectory anchor, not a
+# CPU speedup claim).
+_SEQSHARD_CHILD = r"""
+import dataclasses, os, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.distributed.sharding import mesh_context
+from repro.launch.mesh import make_seq_mesh
+from repro.launch.steps import make_train_step, spion_dryrun_tables
+from repro.models.registry import build
+from repro.optim import adamw_init
+
+L = int(os.environ["SPION_BENCH_L"])
+B = int(os.environ["SPION_BENCH_B"])
+reps = int(os.environ["SPION_BENCH_REPS"])
+mesh = make_seq_mesh(2, 2)
+cfg = get_config("spion-lra").reduced()
+cfg = cfg.replace(num_heads=4, num_kv_heads=2, head_dim=16,
+                  spion=dataclasses.replace(cfg.spion, block_size=16))
+bundle = build(cfg)
+params = jax.tree_util.tree_map(
+    lambda x: x.astype(jnp.float32) if x.ndim >= 2 else x,
+    bundle.init(jax.random.key(0)))
+opt = adamw_init(params)
+rng = np.random.default_rng(0)
+raw = rng.integers(0, cfg.vocab_size, (B, L + 1))
+batch = {"tokens": jnp.asarray(raw[:, :-1]), "labels": jnp.asarray(raw[:, 1:])}
+# bounded-extent pattern: the near-diagonal flood-fill shape seq sharding
+# targets (the default global verticals would fall back by design)
+tables = spion_dryrun_tables(cfg, L, max_extent=2)
+h_l, h_r = tables["halo"]
+
+def timed(step):
+    args = (params, opt, batch, jnp.int32(0), tables)
+    jax.block_until_ready(step(*args)[2]["loss"])          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(step(*args)[2]["loss"])
+    return (time.perf_counter() - t0) / reps * 1e6
+
+with mesh_context(mesh):
+    auto_step = make_train_step(cfg, spion=True, sparse_kernel="auto",
+                                halo=tables["halo"])
+    jaxpr = str(jax.make_jaxpr(auto_step)(params, opt, batch, jnp.int32(0),
+                                          tables))
+    assert "shard_map" in jaxpr and "pallas_call" in jaxpr and \
+        "ppermute" in jaxpr, \
+        "auto must resolve to the seq-sharded fused kernel under the mesh"
+    t_jnp = timed(jax.jit(make_train_step(cfg, spion=True,
+                                          sparse_kernel="jnp")))
+    t_fused = timed(jax.jit(auto_step))
+print(f"ROW,seqshard.halo_blocks,{h_l + h_r},"
+      f"pattern col extent (left={h_l} right={h_r}) in blocks — the halo "
+      "each shard exchanges with its neighbours")
+print("ROW,seqshard.auto_is_seq_sharded,1,"
+      "auto train-step jaxpr has shard_map+pallas_call+ppermute "
+      "(mesh seq=2 data=2)")
+print(f"ROW,seqshard.train_step_jnp_us,{t_jnp:.1f},"
+      "jnp BCSR gather path under GSPMD (4 virtual cpu devices)")
+print(f"ROW,seqshard.train_step_fused_us,{t_fused:.1f},"
+      "seq-sharded fused (Pallas interpreter on CPU: records the dispatch + "
+      f"trajectory; TPU numbers are the speedup claim) jnp/fused="
+      f"{t_jnp / t_fused:.2f}x")
+"""
+
+
+def seqshard_rows(out, smoke=False):
+    """`seqshard` mode: sparse train step on a (seq=2, data=2) virtual mesh
+    — records the pattern halo and the jnp vs seq-sharded-fused train-step
+    rows (subprocess; proves "auto" engages the pattern-bounded halo
+    exchange on sequence-parallel meshes)."""
+    _subprocess_rows(out, _SEQSHARD_CHILD, smoke)
 
 
 def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):

@@ -15,6 +15,9 @@ perf history that CI uploads as an artifact.
   sharded          sparse train step on a 4-virtual-device (data x model)
                    mesh: jnp BCSR vs shard_map-fused before/after rows
                    (subprocess; proves "auto" keeps the kernel on meshes)
+  seqshard         sparse train step on a (seq=2, data=2) mesh: the
+                   sequence-parallel halo-exchange dispatch — halo width,
+                   ppermute proof, jnp vs seq-sharded-fused rows
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
@@ -66,14 +69,17 @@ def _mods(smoke):
         rows=functools.partial(mha_breakdown.bwd_rows, smoke=smoke))
     sharded = SimpleNamespace(
         rows=functools.partial(mha_breakdown.sharded_rows, smoke=smoke))
+    seqshard = SimpleNamespace(
+        rows=functools.partial(mha_breakdown.seqshard_rows, smoke=smoke))
     if smoke:
         breakdown = SimpleNamespace(
             rows=functools.partial(mha_breakdown.rows, L=256))
         return [("opcount", opcount), ("mha_breakdown", breakdown),
                 ("train_step", train_step), ("bwd", bwd),
-                ("sharded", sharded)]
+                ("sharded", sharded), ("seqshard", seqshard)]
     return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
             ("train_step", train_step), ("bwd", bwd), ("sharded", sharded),
+            ("seqshard", seqshard),
             ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),
             ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]

@@ -167,6 +167,41 @@ def host_transpose_tables(col_idx, nvalid, ncb: int | None = None,
     return row_idx, nvalid_t, KT
 
 
+def pattern_col_extents(col_idx, nvalid, *, ncb: int | None = None):
+    """Host-side (numpy) per-layer column extents of a padded-BCSR pattern.
+
+    col_idx (Ly, nrb, K) or (nrb, K) / nvalid (Ly, nrb) or (nrb,) ->
+        (left (Ly,), right (Ly,)) int arrays, in BLOCK units:
+        left[l]  = max over rows r of (r - min valid col of r), >= 0
+        right[l] = max over rows r of (max valid col of r - r), >= 0
+
+    These are computed from the RAW table entries — the tables alone decide
+    which KV blocks the kernels ever touch; the causal / sliding-window tile
+    masks only *remove* positions inside listed blocks, so the raw extent is
+    an upper bound on every row-block's true column span regardless of the
+    mask config (the property the halo-exchange scheme needs; causal
+    patterns get right == 0 and sliding-window bands get left ~ window/B
+    for free because the tables themselves are banded). Rows with no valid
+    entries contribute 0."""
+    col = np.asarray(col_idx, np.int64)
+    nv = np.asarray(nvalid, np.int64)
+    squeeze = col.ndim == 2
+    if squeeze:
+        col, nv = col[None], nv[None]
+    Ly, nrb, K = col.shape
+    ncb_ = int(ncb) if ncb is not None else nrb
+    valid = np.arange(K)[None, None, :] < nv[:, :, None]          # (Ly,nrb,K)
+    colc = np.clip(col, 0, ncb_ - 1)
+    rows = np.arange(nrb)[None, :, None]
+    left = np.where(valid, rows - colc, 0).max(axis=(1, 2))
+    right = np.where(valid, colc - rows, 0).max(axis=(1, 2))
+    left = np.maximum(left, 0).astype(np.int64)
+    right = np.maximum(right, 0).astype(np.int64)
+    if squeeze:
+        return left[:1], right[:1]
+    return left, right
+
+
 def build_sparsity_plan(col_idx, nvalid, block: int, *, ncb: int | None = None,
                         max_kt: int | None = None) -> SparsityPlan:
     """Build the full SparsityPlan from (stacked or single-layer) forward
@@ -181,6 +216,7 @@ def build_sparsity_plan(col_idx, nvalid, block: int, *, ncb: int | None = None,
     ncb_ = int(ncb) if ncb is not None else nrb
     row_idx, nvalid_t, kt = host_transpose_tables(col, nv, ncb=ncb_,
                                                   max_kt=max_kt)
+    ext_l, ext_r = pattern_col_extents(col, nv, ncb=ncb_)
     stats = {
         "kt_star": int(kt),
         "nrb": int(nrb),
@@ -190,6 +226,15 @@ def build_sparsity_plan(col_idx, nvalid, block: int, *, ncb: int | None = None,
         "per_layer_density": [round(float(d), 6)
                               for d in nv.sum(axis=1) / float(nrb * ncb_)],
         "dkv_grid_shrink": round(float(nrb) / float(kt), 4),
+        # sequence-parallel halo bounds (DESIGN.md §10): the tables are one
+        # stacked step input traced through the layer scan, so the shard-map
+        # halo must cover every layer — the per-layer extents are kept for
+        # diagnostics, the max is what the dispatch consumes
+        "col_extent_left": ext_l.astype(int).tolist(),
+        "col_extent_right": ext_r.astype(int).tolist(),
+        # a list, not a tuple: plan_stats round-trips through checkpoint
+        # JSON, which would silently turn a tuple into a list on resume
+        "halo": [int(ext_l.max()), int(ext_r.max())],
     }
     tables = {
         "col_idx": jnp.asarray(col),

@@ -71,6 +71,17 @@ class SpionState:
         st.frob_hist = [np.asarray(h) for h in d["frob_hist"]]
         tab = d.get("tables")
         meta = d.get("tables_meta")
+        if arrays and not (tab or meta):
+            # plan arrays were supplied but the state dict promises no
+            # tables at all — a mismatched (state JSON, binary arrays) pair.
+            # Silently dropping the arrays here used to make a sparse-phase
+            # resume train dense forever; fail loudly instead.
+            raise ValueError(
+                "SpionState.from_py: plan arrays were supplied but the "
+                "state dict has neither 'tables' nor 'tables_meta' — the "
+                "checkpoint state JSON and its binary extra_arrays do not "
+                "belong together (or the state was saved pre-plan). Restore "
+                "the matching pair, or pass arrays=None to resume dense.")
         if arrays and (tab or meta):
             st.tables = {k: jnp.asarray(np.asarray(arrays[k], np.int32))
                          for k in PLAN_TABLE_KEYS if k in arrays}
@@ -114,8 +125,14 @@ class SpionController:
         return {"filt": self.filt, "block": self.cfg.block_size}
 
     def spion_kwargs(self, state: SpionState):
-        """`spion=` kwarg for forward() during the sparse phase (else None)."""
-        if state.phase == "sparse" and state.tables is not None:
+        """`spion=` kwarg for forward() during the sparse phase (else None).
+
+        Gated on cfg.enabled, not just the state: a checkpoint captured in
+        the sparse phase but restored under a SPION-disabled config still
+        carries `state.tables`, and injecting them would silently keep the
+        step sparse against the operator's explicit config."""
+        if (self.cfg.enabled and state.phase == "sparse"
+                and state.tables is not None):
             return state.tables
         return None
 

@@ -60,10 +60,16 @@ def _axis_size(mesh, entry) -> int:
 
 def sanitize_spec(mesh, spec: P, shape) -> P:
     """Drop (or shrink) spec entries whose mesh-axis product does not divide
-    the corresponding dim — jit in/out shardings require exact divisibility."""
+    the corresponding dim — jit in/out shardings require exact divisibility.
+    Axis names the mesh does not have are dropped first (the rules state
+    the full logical layout; a (seq, data) mesh simply has no 'model')."""
     entries = list(spec) + [None] * (len(shape) - len(spec))
     out = []
     for d, e in zip(shape, entries):
+        if isinstance(e, str) and e not in mesh.shape:
+            e = None
+        elif isinstance(e, (tuple, list)):
+            e = tuple(a for a in e if a in mesh.shape) or None
         if e is None:
             out.append(None)
             continue
@@ -84,20 +90,43 @@ def sanitize_spec(mesh, spec: P, shape) -> P:
     return P(*out)
 
 
+# the full logical-axis vocabulary model code may name in a constrain()
+# spec; anything else is a typo and must fail at trace time, not silently
+# replicate (the known names merely drop to None on meshes without them)
+_LOGICAL_AXES = frozenset({"pod", "data", "model", "seq"})
+
+
 def constrain(x, *spec):
     """with_sharding_constraint if a mesh is active, else identity.
 
     `spec` entries: axis-name str, tuple of axis names, or None. The sentinel
-    string "batch" expands to the mesh's data axes. wsc tolerates uneven dims
-    (GSPMD pads), so no divisibility sanitisation here — only jit-boundary
-    shardings need sanitize_spec."""
+    string "batch" expands to the mesh's data axes; KNOWN axis names the
+    mesh does not have resolve to None (model code states the FULL logical
+    layout — e.g. "model" on heads — and smaller meshes like a (seq, data)
+    pair just ignore the absent axes), while names outside the logical
+    vocabulary raise. wsc tolerates uneven dims (GSPMD pads), so no
+    divisibility sanitisation here — only jit-boundary shardings need
+    sanitize_spec."""
     mesh = current_mesh()
     if mesh is None:
         return x
+
+    def one(a):
+        if a not in _LOGICAL_AXES:
+            raise ValueError(
+                f"constrain: unknown logical axis {a!r} (valid: "
+                f"{sorted(_LOGICAL_AXES)} or the 'batch' sentinel)")
+        return a if a in mesh.axis_names else None
+
     resolved = []
     for s in spec:
         if s == "batch":
             resolved.append(data_axes(mesh))
+        elif isinstance(s, str):
+            resolved.append(one(s))
+        elif isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if one(a) is not None)
+            resolved.append(kept if kept else None)
         else:
             resolved.append(s)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))
@@ -132,12 +161,56 @@ def kernel_shard_axes(mesh: Mesh, batch: int, kv_heads: int):
     return baxes, kv_ax
 
 
-def kernel_pspecs_from_axes(baxes, kv_ax):
+def kernel_seq_axis(mesh: Mesh, nrb, halo):
+    """'seq'-axis decision for the shard_map'd fused kernel (DESIGN.md §10).
+
+    `nrb` is the global row-block count (seq_len / block); `halo` the
+    pattern's (left, right) column extent in block units (SparsityPlan
+    stats["halo"], max over layers). Returns (axis_or_None, reason): the
+    axis when Q row-blocks can shard over 'seq' with a single-neighbor
+    halo exchange, else None plus an actionable reason. The fit rules:
+
+      - nrb % n == 0 (shard_map admits no padding); W = nrb // n;
+      - halo_left <= W and halo_right <= W — each halo comes from ONE
+        `ppermute` step to the adjacent shard;
+      - halo_left + halo_right <= (n - 1) * W — the halo-extended local
+        window must not alias global column-blocks (the ring wraps), or
+        the dK/dV halo reduction would double-count.
+
+    Patterns whose extent violates these (e.g. a global-attention vertical
+    stripe) make the caller fall back to batch/KV sharding — loudly, never
+    by silently exchanging the full sequence.
+    """
+    n = mesh.shape.get("seq", 1)
+    if n <= 1:
+        return None, "mesh has no 'seq' axis (or |seq| == 1)"
+    if halo is None:
+        return None, ("no pattern halo supplied — seq sharding needs the "
+                      "SparsityPlan's column-extent stats (stats['halo'], "
+                      "threaded as the static spion tables key 'halo')")
+    if nrb is None or nrb % n != 0:
+        return None, f"nrb={nrb} row-blocks not divisible by |seq|={n}"
+    W = nrb // n
+    h_l, h_r = int(halo[0]), int(halo[1])
+    if h_l > W or h_r > W:
+        return None, (f"pattern halo ({h_l},{h_r}) blocks exceeds the shard "
+                      f"width W={W} — the exchange would need more than the "
+                      f"adjacent shard's edge")
+    if h_l + h_r > (n - 1) * W:
+        return None, (f"halo window {h_l}+{W}+{h_r} blocks exceeds the "
+                      f"global {nrb} — local storage would alias "
+                      f"column-blocks across the ring wrap")
+    return "seq", f"W={W} halo=({h_l},{h_r})"
+
+
+def kernel_pspecs_from_axes(baxes, kv_ax, seq_ax=None):
     """(qspec, kvspec, table_spec) for chosen kernel shard axes — the single
     source of the shard_map wrapper's spec layout (kernels/sharded.py uses
-    this; keep it in lockstep with ops._split_heads's (B,KV,G,S,hd))."""
-    return (P(baxes, kv_ax, None, None, None),
-            P(baxes, kv_ax, None, None), P())
+    this; keep it in lockstep with ops._split_heads's (B,KV,G,S,hd)).
+    `seq_ax` shards q's row axis and k/v's sequence axis ('seq' mode, halo
+    exchange inside the body); the tables always replicate."""
+    return (P(baxes, kv_ax, None, seq_ax, None),
+            P(baxes, kv_ax, seq_ax, None), P())
 
 
 def kernel_pspecs(mesh: Mesh, batch: int, kv_heads: int):

@@ -34,6 +34,17 @@ match the dense reference there (tests/test_kernels.py).
 Grids: fwd/dQ (N, G, nrb, K); dK/dV (N, ncb, KT, G) with KT = KT* under a
 plan, KT = nrb on the fallback — innermost dims sequential; accumulators in
 VMEM scratch.
+
+Sequence-parallel operation (DESIGN.md §10): every kernel takes a third
+scalar-prefetch input `offs = [row0, col0]` mapping shard-local block
+indices to global ones (absolute row-block = local r + row0, absolute
+column-block = storage col + col0). The causal / sliding-window tile masks
+and the Alg. 6 zero-correction are computed in GLOBAL coordinates, so a
+seq-shard running over its local Q rows and halo-extended K/V window gets
+exactly the meshless math; the meshless path passes [0, 0] and is
+bit-identical to before. `seq_len` (the non-causal zero-correction row
+total) is overridable for the same reason — under a seq shard q.shape[2]
+is the LOCAL row count, not the global sequence length.
 """
 from __future__ import annotations
 
@@ -68,9 +79,9 @@ def _tile_mask(r, col, block, causal, sliding_window):
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
-                m_ref, l_ref, acc_ref, *, block, hd, K, seq_len, scale,
-                causal, sliding_window):
+def _fwd_kernel(col_ref, nvalid_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
+                lse_ref, m_ref, l_ref, acc_ref, *, block, hd, K, seq_len,
+                scale, causal, sliding_window):
     r = pl.program_id(2)
     c = pl.program_id(3)
 
@@ -86,7 +97,8 @@ def _fwd_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         k = k_ref[0].astype(jnp.float32)         # (B, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        ok = _tile_mask(r, col_ref[r, c], block, causal, sliding_window)
+        ok = _tile_mask(r + off_ref[0], col_ref[r, c] + off_ref[1], block,
+                        causal, sliding_window)
         s = jnp.where(ok, s, NEG)
 
         m_prev = m_ref[:, 0]
@@ -105,7 +117,9 @@ def _fwd_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         m = m_ref[:, 0]
         l = l_ref[:, 0]
         # Alg. 6 line 15 zero-correction: pruned positions count exp(0 - m).
-        rows = r * block + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+        # Row positions are GLOBAL (off_ref[0] rebases seq-shard-local rows).
+        rows = (r + off_ref[0]) * block + \
+            jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
         if causal:
             rt = (rows + 1).astype(jnp.float32)
             if sliding_window is not None:
@@ -116,7 +130,8 @@ def _fwd_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         stored = jnp.zeros((block,), jnp.float32)
 
         def count(i, acc):
-            ok = _tile_mask(r, col_ref[r, i], block, causal, sliding_window)
+            ok = _tile_mask(r + off_ref[0], col_ref[r, i] + off_ref[1], block,
+                            causal, sliding_window)
             ok &= jnp.full((block, block), i < nvalid_ref[r])
             return acc + jnp.sum(ok.astype(jnp.float32), -1)
 
@@ -128,26 +143,40 @@ def _fwd_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         lse_ref[0, 0] = jnp.where(denom > 0.0, m + jnp.log(safe), jnp.inf)
 
 
+def _zero_offsets():
+    return jnp.zeros((2,), jnp.int32)
+
+
 def _fused_forward(q, k, v, col_idx, nvalid, *, block, causal, sliding_window,
-                   interpret):
-    """Returns (o (N, G, S, hd), lse (N, G, S) fp32)."""
+                   interpret, offsets=None, seq_len=None):
+    """Returns (o (N, G, S, hd), lse (N, G, S) fp32). `S` is the local row
+    count; `seq_len` (default S) is the GLOBAL sequence length used by the
+    non-causal zero-correction, and `offsets` the [row0, col0] rebasing of
+    local block indices to global ones (see module docstring)."""
     N, G, S, hd = q.shape
     nrb, K = col_idx.shape
+    offsets = _zero_offsets() if offsets is None else offsets
     scale = 1.0 / np.sqrt(hd)
-    kern = functools.partial(_fwd_kernel, block=block, hd=hd, K=K, seq_len=S,
+    kern = functools.partial(_fwd_kernel, block=block, hd=hd, K=K,
+                             seq_len=S if seq_len is None else int(seq_len),
                              scale=scale, causal=causal,
                              sliding_window=sliding_window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(N, G, nrb, K),
         in_specs=[
-            pl.BlockSpec((1, 1, block, hd), lambda n, g, r, c, col, nv: (n, g, r, 0)),
-            pl.BlockSpec((1, block, hd), lambda n, g, r, c, col, nv: (n, col[r, c], 0)),
-            pl.BlockSpec((1, block, hd), lambda n, g, r, c, col, nv: (n, col[r, c], 0)),
+            pl.BlockSpec((1, 1, block, hd),
+                         lambda n, g, r, c, col, nv, off: (n, g, r, 0)),
+            pl.BlockSpec((1, block, hd),
+                         lambda n, g, r, c, col, nv, off: (n, col[r, c], 0)),
+            pl.BlockSpec((1, block, hd),
+                         lambda n, g, r, c, col, nv, off: (n, col[r, c], 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block, hd), lambda n, g, r, c, col, nv: (n, g, r, 0)),
-            pl.BlockSpec((1, 1, block), lambda n, g, r, c, col, nv: (n, g, r)),
+            pl.BlockSpec((1, 1, block, hd),
+                         lambda n, g, r, c, col, nv, off: (n, g, r, 0)),
+            pl.BlockSpec((1, 1, block),
+                         lambda n, g, r, c, col, nv, off: (n, g, r)),
         ],
         scratch_shapes=[
             pltpu.VMEM((block, 1), jnp.float32),    # running max
@@ -161,16 +190,16 @@ def _fused_forward(q, k, v, col_idx, nvalid, *, block, causal, sliding_window,
         out_shape=[jax.ShapeDtypeStruct((N, G, S, hd), q.dtype),
                    jax.ShapeDtypeStruct((N, G, S), jnp.float32)],
         interpret=interpret,
-    )(col_idx, nvalid, q, k, v)
+    )(col_idx, nvalid, offsets, q, k, v)
 
 
 # ---------------------------------------------------------------------------
 # backward: dQ  (row-block grid, streams active KV tiles — forward's twin)
 # ---------------------------------------------------------------------------
 
-def _dq_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
-               delta_ref, dq_ref, acc_ref, *, block, K, scale, causal,
-               sliding_window):
+def _dq_kernel(col_ref, nvalid_ref, off_ref, q_ref, k_ref, v_ref, do_ref,
+               lse_ref, delta_ref, dq_ref, acc_ref, *, block, K, scale,
+               causal, sliding_window):
     r = pl.program_id(2)
     c = pl.program_id(3)
 
@@ -188,7 +217,8 @@ def _dq_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
         delta = delta_ref[0, 0]                   # (B,)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        ok = _tile_mask(r, col_ref[r, c], block, causal, sliding_window)
+        ok = _tile_mask(r + off_ref[0], col_ref[r, c] + off_ref[1], block,
+                        causal, sliding_window)
         p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
@@ -203,17 +233,21 @@ def _dq_kernel(col_ref, nvalid_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
 
 
 def _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, *, block, causal,
-              sliding_window, interpret):
+              sliding_window, interpret, offsets=None):
     N, G, S, hd = q.shape
     nrb, K = col_idx.shape
+    offsets = _zero_offsets() if offsets is None else offsets
     scale = 1.0 / np.sqrt(hd)
     kern = functools.partial(_dq_kernel, block=block, K=K, scale=scale,
                              causal=causal, sliding_window=sliding_window)
-    qspec = pl.BlockSpec((1, 1, block, hd), lambda n, g, r, c, col, nv: (n, g, r, 0))
-    kvspec = pl.BlockSpec((1, block, hd), lambda n, g, r, c, col, nv: (n, col[r, c], 0))
-    rowspec = pl.BlockSpec((1, 1, block), lambda n, g, r, c, col, nv: (n, g, r))
+    qspec = pl.BlockSpec((1, 1, block, hd),
+                         lambda n, g, r, c, col, nv, off: (n, g, r, 0))
+    kvspec = pl.BlockSpec((1, block, hd),
+                          lambda n, g, r, c, col, nv, off: (n, col[r, c], 0))
+    rowspec = pl.BlockSpec((1, 1, block),
+                           lambda n, g, r, c, col, nv, off: (n, g, r))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(N, G, nrb, K),
         in_specs=[qspec, kvspec, kvspec, qspec, rowspec, rowspec],
         out_specs=qspec,
@@ -224,16 +258,16 @@ def _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, *, block, causal,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((N, G, S, hd), jnp.float32),
         interpret=interpret,
-    )(col_idx, nvalid, q, k, v, do, lse, delta)
+    )(col_idx, nvalid, offsets, q, k, v, do, lse, delta)
 
 
 # ---------------------------------------------------------------------------
 # backward: dK/dV  (column-block grid over the transposed BCSR tables)
 # ---------------------------------------------------------------------------
 
-def _dkv_kernel(row_ref, nvt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
-                delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, block, KT, G,
-                scale, causal, sliding_window):
+def _dkv_kernel(row_ref, nvt_ref, off_ref, q_ref, k_ref, v_ref, do_ref,
+                lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, block,
+                KT, G, scale, causal, sliding_window):
     c = pl.program_id(1)
     t = pl.program_id(2)
     g = pl.program_id(3)
@@ -254,7 +288,8 @@ def _dkv_kernel(row_ref, nvt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
         delta = delta_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        ok = _tile_mask(r, c, block, causal, sliding_window)
+        ok = _tile_mask(r + off_ref[0], c + off_ref[1], block, causal,
+                        sliding_window)
         p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
@@ -273,19 +308,22 @@ def _dkv_kernel(row_ref, nvt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
 
 
 def _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t, *, block, causal,
-               sliding_window, interpret):
+               sliding_window, interpret, offsets=None):
     N, G, S, hd = q.shape
+    Sk = k.shape[1]
     ncb, KT = row_idx.shape
+    offsets = _zero_offsets() if offsets is None else offsets
     scale = 1.0 / np.sqrt(hd)
     kern = functools.partial(_dkv_kernel, block=block, KT=KT, G=G, scale=scale,
                              causal=causal, sliding_window=sliding_window)
     qspec = pl.BlockSpec((1, 1, block, hd),
-                         lambda n, c, t, g, row, nvt: (n, g, row[c, t], 0))
-    colspec = pl.BlockSpec((1, block, hd), lambda n, c, t, g, row, nvt: (n, c, 0))
+                         lambda n, c, t, g, row, nvt, off: (n, g, row[c, t], 0))
+    colspec = pl.BlockSpec((1, block, hd),
+                           lambda n, c, t, g, row, nvt, off: (n, c, 0))
     rowspec = pl.BlockSpec((1, 1, block),
-                           lambda n, c, t, g, row, nvt: (n, g, row[c, t]))
+                           lambda n, c, t, g, row, nvt, off: (n, g, row[c, t]))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         # g innermost so every revisit of the (n, c) output tile is consecutive
         grid=(N, ncb, KT, G),
         in_specs=[qspec, colspec, colspec, qspec, rowspec, rowspec],
@@ -296,10 +334,10 @@ def _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t, *, block, causal,
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((N, S, hd), jnp.float32),
-                   jax.ShapeDtypeStruct((N, S, hd), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((N, Sk, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((N, Sk, hd), jnp.float32)],
         interpret=interpret,
-    )(row_idx, nvalid_t, q, k, v, do, lse, delta)
+    )(row_idx, nvalid_t, offsets, q, k, v, do, lse, delta)
 
 
 # ---------------------------------------------------------------------------
@@ -312,7 +350,7 @@ def _int_zero(x):
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_op(block, causal, sliding_window, interpret, with_plan):
+def _fused_op(block, causal, sliding_window, interpret, with_plan, seq_len):
     """One differentiable fused-attention op per static config (cached so the
     custom_vjp identity is stable across traces).
 
@@ -321,56 +359,65 @@ def _fused_op(block, causal, sliding_window, interpret, with_plan):
     grid width is row_idx.shape[1] = KT* (true max column population) and no
     bcsr_transpose runs under jit. with_plan=False is the fallback that
     rebuilds the transposed tables in every backward at width KT = nrb.
+
+    Every op additionally takes the `offs = [row0, col0]` block-index
+    rebasing as an int32 primal (float0 cotangent); seq_len=None means "use
+    q.shape[2]" — both are [0,0]/None everywhere except inside a seq shard.
     """
     fwd_ = functools.partial(_fused_forward, block=block, causal=causal,
-                             sliding_window=sliding_window, interpret=interpret)
+                             sliding_window=sliding_window,
+                             interpret=interpret, seq_len=seq_len)
 
-    def bwd_core(q, k, v, col_idx, nvalid, o, lse, do, row_idx, nvalid_t):
+    def bwd_core(q, k, v, col_idx, nvalid, offs, o, lse, do, row_idx,
+                 nvalid_t):
         """Shared backward body — both vjp variants differ only in where the
         transposed tables come from (plan residuals vs under-jit rebuild)."""
         delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
         dq = _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, block=block,
                        causal=causal, sliding_window=sliding_window,
-                       interpret=interpret)
+                       interpret=interpret, offsets=offs)
         dk, dv = _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t,
                             block=block, causal=causal,
-                            sliding_window=sliding_window, interpret=interpret)
+                            sliding_window=sliding_window, interpret=interpret,
+                            offsets=offs)
         return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
     if with_plan:
         @jax.custom_vjp
-        def op(q, k, v, col_idx, nvalid, row_idx, nvalid_t):
-            return fwd_(q, k, v, col_idx, nvalid)[0]
+        def op(q, k, v, col_idx, nvalid, offs, row_idx, nvalid_t):
+            return fwd_(q, k, v, col_idx, nvalid, offsets=offs)[0]
 
-        def op_fwd(q, k, v, col_idx, nvalid, row_idx, nvalid_t):
-            o, lse = fwd_(q, k, v, col_idx, nvalid)
-            return o, (q, k, v, col_idx, nvalid, row_idx, nvalid_t, o, lse)
+        def op_fwd(q, k, v, col_idx, nvalid, offs, row_idx, nvalid_t):
+            o, lse = fwd_(q, k, v, col_idx, nvalid, offsets=offs)
+            return o, (q, k, v, col_idx, nvalid, offs, row_idx, nvalid_t, o,
+                       lse)
 
         def op_bwd(res, do):
-            q, k, v, col_idx, nvalid, row_idx, nvalid_t, o, lse = res
-            dq, dk, dv = bwd_core(q, k, v, col_idx, nvalid, o, lse, do,
+            q, k, v, col_idx, nvalid, offs, row_idx, nvalid_t, o, lse = res
+            dq, dk, dv = bwd_core(q, k, v, col_idx, nvalid, offs, o, lse, do,
                                   row_idx, nvalid_t)
             return (dq, dk, dv, _int_zero(col_idx), _int_zero(nvalid),
-                    _int_zero(row_idx), _int_zero(nvalid_t))
+                    _int_zero(offs), _int_zero(row_idx), _int_zero(nvalid_t))
 
         op.defvjp(op_fwd, op_bwd)
         return op
 
     @jax.custom_vjp
-    def op(q, k, v, col_idx, nvalid):
-        return fwd_(q, k, v, col_idx, nvalid)[0]
+    def op(q, k, v, col_idx, nvalid, offs):
+        return fwd_(q, k, v, col_idx, nvalid, offsets=offs)[0]
 
-    def op_fwd(q, k, v, col_idx, nvalid):
-        o, lse = fwd_(q, k, v, col_idx, nvalid)
-        return o, (q, k, v, col_idx, nvalid, o, lse)
+    def op_fwd(q, k, v, col_idx, nvalid, offs):
+        o, lse = fwd_(q, k, v, col_idx, nvalid, offsets=offs)
+        return o, (q, k, v, col_idx, nvalid, offs, o, lse)
 
     def op_bwd(res, do):
-        q, k, v, col_idx, nvalid, o, lse = res
+        q, k, v, col_idx, nvalid, offs, o, lse = res
         row_idx, nvalid_t = bcsr_transpose(col_idx, nvalid,
                                            ncb=k.shape[1] // block)
-        dq, dk, dv = bwd_core(q, k, v, col_idx, nvalid, o, lse, do,
+        dq, dk, dv = bwd_core(q, k, v, col_idx, nvalid, offs, o, lse, do,
                               row_idx, nvalid_t)
-        return dq, dk, dv, _int_zero(col_idx), _int_zero(nvalid)
+        return dq, dk, dv, _int_zero(col_idx), _int_zero(nvalid), \
+            _int_zero(offs)
 
     op.defvjp(op_fwd, op_bwd)
     return op
@@ -378,8 +425,9 @@ def _fused_op(block, causal, sliding_window, interpret, with_plan):
 
 def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
                                  causal=False, sliding_window=None,
-                                 interpret=None, row_idx=None, nvalid_t=None):
-    """q (N, G, S, hd) — G query heads share each kv head; k, v (N, S, hd);
+                                 interpret=None, row_idx=None, nvalid_t=None,
+                                 offsets=None, seq_len=None):
+    """q (N, G, S, hd) — G query heads share each kv head; k, v (N, Sk, hd);
     col_idx (nrb, K) clamped, nvalid (nrb,). Returns (N, G, S, hd).
 
     Differentiable: jax.grad flows through Pallas dQ / dK/dV kernels (dK/dV
@@ -390,7 +438,13 @@ def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
     `nvalid_t (ncb,)`, the dK/dV backward grid is (N, ncb, KT*, G) — sized
     to the measured pattern — and no bcsr_transpose runs under jit. Without
     them the backward falls back to the under-jit transpose at the
-    always-safe width KT = nrb.
+    always-safe width KT = ncb.
+
+    Sequence-parallel callers (kernels/sharded.py seq mode) pass local
+    tables, `offsets = [row0, col0]` (int32 (2,), the global block index of
+    local Q row-block 0 and of K/V storage block 0) and the GLOBAL
+    `seq_len`; Sk may then exceed S by the halo width. Meshless callers
+    leave both at None (identical math to before).
 
     Single-shard op: under a multi-device mesh it must run inside the
     shard_map wrapper (kernels/sharded.py) — pallas_call has no GSPMD
@@ -409,8 +463,11 @@ def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
             f"path (cfg.spion.kernel='jnp').")
     op = _fused_op(int(block), bool(causal),
                    None if sliding_window is None else int(sliding_window),
-                   default_interpret(interpret), row_idx is not None)
+                   default_interpret(interpret), row_idx is not None,
+                   None if seq_len is None else int(seq_len))
+    offs = _zero_offsets() if offsets is None else offsets.astype(jnp.int32)
     if row_idx is not None:
         return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32),
-                  row_idx.astype(jnp.int32), nvalid_t.astype(jnp.int32))
-    return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32))
+                  offs, row_idx.astype(jnp.int32), nvalid_t.astype(jnp.int32))
+    return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32),
+              offs)

@@ -102,25 +102,28 @@ def _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, *, causal,
 
 @functools.partial(jax.jit, static_argnames=("mesh", "causal",
                                              "sliding_window", "block",
-                                             "interpret"))
+                                             "interpret", "halo"))
 def _dispatch_sharded(q, k, v, col, nvalid, row_idx, nvalid_t, *, mesh,
-                      causal, sliding_window, block, interpret):
+                      causal, sliding_window, block, interpret, halo):
     from repro.kernels.sharded import sharded_fused_attention
     qh, kh, vh, dims = _split_heads(q, k, v)
     o = sharded_fused_attention(mesh, qh, kh, vh, col, nvalid, block=block,
                                 causal=causal, sliding_window=sliding_window,
                                 interpret=interpret, row_idx=row_idx,
-                                nvalid_t=nvalid_t)
+                                nvalid_t=nvalid_t, halo=halo)
     return _merge_heads(o, dims)
 
 
 def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None,
-                           row_idx=None, nvalid_t=None):
+                           row_idx=None, nvalid_t=None, halo=None):
     """Pallas-kernel counterpart of core.sparse_attention.bcsr_attention.
     With fused=True the result is differentiable (sparse backward kernels).
     `row_idx`/`nvalid_t` are a SparsityPlan's precomputed transposed tables
     (width KT*); supplying them shrinks the dK/dV backward grid to the true
     pattern width and removes the per-step under-jit bcsr_transpose.
+    `halo` is the plan's static (left, right) column extent in block units —
+    it unlocks 'seq'-axis sharding under a sequence-parallel mesh
+    (kernels/sharded.py).
 
     Under an active multi-device mesh the fused path runs through the
     shard_map wrapper; the 3-kernel pipeline (fused=False, forward-only) has
@@ -139,7 +142,9 @@ def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None,
         return _dispatch_sharded(q, k, v, col, nvalid, row_idx, nvalid_t,
                                  mesh=mesh, causal=cfg.causal,
                                  sliding_window=cfg.sliding_window,
-                                 block=bcsr.block, interpret=interp)
+                                 block=bcsr.block, interpret=interp,
+                                 halo=None if halo is None else
+                                 (int(halo[0]), int(halo[1])))
     return _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t,
                      causal=cfg.causal, sliding_window=cfg.sliding_window,
                      block=bcsr.block, fused=fused, interpret=interp)

@@ -89,7 +89,10 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
             osp = {"mu": zero1_pspecs(params, mesh), "nu": zero1_pspecs(params, mesh),
                    "count": P()}
             osp_ns = _ns(mesh, osp)
-            step_fn = make_train_step(cfg, spion=(mode == "sparse"), n_micro=n_micro)
+            step_fn = make_train_step(cfg, spion=(mode == "sparse"),
+                                      n_micro=n_micro,
+                                      halo=None if tables is None
+                                      else tables.get("halo"))
             args = [params, opt, specs, jax.ShapeDtypeStruct((), jnp.int32)]
             in_sh = [psp_ns, osp_ns, bsp_ns, rep]
             out_sh = (psp_ns, osp_ns, {"loss": rep, "gnorm": rep, "lr": rep})
@@ -111,7 +114,9 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
                              donate_argnums=(0, 1))
             return jf, args
         # prefill
-        step_fn = make_prefill_step(cfg, spion=(mode == "sparse"))
+        step_fn = make_prefill_step(cfg, spion=(mode == "sparse"),
+                                    halo=None if tables is None
+                                    else tables.get("halo"))
         S_out = shape.seq_len
         logits_sh = NamedSharding(mesh, sanitize_spec(
             mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names),
@@ -299,11 +304,24 @@ def run_cell(arch, shape_name, multi_pod, mode, outdir, verbose=True,
             # with the global batch could claim "fused" for a cell whose
             # step actually dispatched jnp.
             sparse_kernel = None
+            seq_sharded = None
             if mode == "sparse":
+                from repro.distributed.sharding import kernel_seq_axis
+                from repro.launch.steps import spion_dryrun_halo
                 from repro.models.attention import resolve_sparse_kernel
+                # same pattern build_cell compiles with — the recorded
+                # resolution must match the compiled step's dispatch — but
+                # only the cheap extent scan, not a second full plan build
+                halo = spion_dryrun_halo(cfg, shape.seq_len,
+                                         _spion_layers(cfg))
+                nrb = max(shape.seq_len // cfg.spion.block_size, 1)
                 sparse_kernel = resolve_sparse_kernel(
                     cfg, max(shape.global_batch // n_micro, 1),
-                    cfg.num_kv_heads)
+                    cfg.num_kv_heads, nrb=nrb, halo=halo)
+                seq_ax, seq_reason = kernel_seq_axis(mesh, nrb, halo)
+                seq_sharded = {"active": seq_ax is not None,
+                               "halo": list(halo) if halo else None,
+                               "detail": seq_reason}
             compiled_full = compile_cell(cfg.replace(scan_unroll=1), shape, mesh,
                                          mode, n_micro=n_micro)
             t_full = time.time() - t0
@@ -312,6 +330,7 @@ def run_cell(arch, shape_name, multi_pod, mode, outdir, verbose=True,
                    "shape": shape_name, "mesh": "multi" if multi_pod else "single",
                    "mode": mode, "chips": chips, "n_micro": n_micro,
                    "sparse_kernel": sparse_kernel,
+                   "seq_sharded": seq_sharded,
                    "t_compile_full_s": round(t_full, 1),
                    "params": cfg.param_count(),
                    "active_params": cfg.active_param_count(),

@@ -25,10 +25,30 @@ def make_mesh(shape, axes):
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, seq: int = 1):
+    """The pod meshes. `seq > 1` carves a sequence-parallel axis out of the
+    data axis (chip count unchanged): long-context sparse training shards Q
+    row-blocks over 'seq' with a pattern-bounded halo exchange
+    (kernels/sharded.py, DESIGN.md §10) while dense ops keep GSPMD."""
+    if seq > 1:
+        if 16 % seq:
+            raise ValueError(f"seq={seq} must divide the data axis (16)")
+        shape = (2, seq, 16 // seq, 16) if multi_pod else (seq, 16 // seq, 16)
+        axes = (("pod", "seq", "data", "model") if multi_pod
+                else ("seq", "data", "model"))
+        return make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
+
+
+def make_seq_mesh(seq: int, data: int = 1, model: int = 1):
+    """Small explicit (seq, data, model) mesh — tests / virtual-device CI.
+    Axes of size 1 are kept (the names drive the dispatch, not the sizes)
+    except model, dropped when 1 to mirror the common 2-axis test meshes."""
+    if model > 1:
+        return make_mesh((seq, data, model), ("seq", "data", "model"))
+    return make_mesh((seq, data), ("seq", "data"))
 
 
 def make_host_mesh():

@@ -26,13 +26,18 @@ def _ns(mesh, spec):
 
 
 def batch_pspecs(cfg: ModelConfig, batch, mesh: Mesh):
-    """Shard batch leading (batch) dim over the data axes."""
+    """Shard batch leading (batch) dim over the data axes; on a
+    sequence-parallel mesh the (B, S, ...) token dim additionally shards
+    over 'seq' (GSPMD reshards as needed up to the kernel shard_map
+    boundary, which consumes exactly this layout)."""
     daxes = data_axes(mesh)
+    seq_ax = "seq" if mesh.shape.get("seq", 1) > 1 else None
 
     def one(x):
         if x.ndim == 0:
             return P()
-        return sanitize_spec(mesh, P(daxes, *([None] * (x.ndim - 1))), x.shape)
+        rest = [seq_ax] + [None] * (x.ndim - 2) if x.ndim >= 2 else []
+        return sanitize_spec(mesh, P(daxes, *rest), x.shape)
     return jax.tree_util.tree_map(one, batch)
 
 
@@ -72,18 +77,46 @@ def cache_pspecs(cfg: ModelConfig, cache, mesh: Mesh, batch_size: int):
     return jax.tree_util.tree_map_with_path(sanitized, cache)
 
 
-def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = None):
+def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = None,
+                        max_extent: Optional[int] = None):
     """Deterministic SPION-shaped pattern (diag band + verticals) at the
     configured alpha density — the sparse-phase stand-in for dry-runs.
     Tables are tiny ((Ly, nrb, K) int32) and enter the step as inputs.
 
     Emits the full SparsityPlan payload — forward tables PLUS the host-built
-    transposed tables (row_idx (Ly, nrb, KT*), nvalid_t (Ly, nrb)) and the
-    static width 'kt_star' — so dryrun/HLO checks exercise the exact step
-    signature (and catch plan-shape bugs) before a real run."""
-    import numpy as np
+    transposed tables (row_idx (Ly, nrb, KT*), nvalid_t (Ly, nrb)), the
+    static width 'kt_star' and the static 'halo' column-extent pair — so
+    dryrun/HLO checks exercise the exact step signature (and catch
+    plan-shape bugs) before a real run.
 
+    `max_extent` clips the off-diagonal verticals to the band
+    [r - max_extent, r + max_extent]: the default global verticals make the
+    pattern's column extent ~nrb (a seq-parallel mesh then falls back to
+    batch/KV sharding by design); a bounded band stands in for the
+    near-diagonal flood-fill patterns the halo exchange targets."""
     from repro.core.sparse_attention import build_sparsity_plan
+    cols, nval, blk, nrb = _dryrun_pattern(cfg, seq_len, layers, max_extent)
+    plan = build_sparsity_plan(cols, nval, blk, ncb=nrb)
+    return dict(plan.tables, kt_star=plan.kt_star,
+                halo=plan.stats["halo"])
+
+
+def spion_dryrun_halo(cfg: ModelConfig, seq_len: int,
+                      layers: Optional[int] = None,
+                      max_extent: Optional[int] = None):
+    """Just the [left, right] halo extents of the dry-run pattern — the
+    cheap forward-table scan (core.sparse_attention.pattern_col_extents),
+    WITHOUT the host transpose spion_dryrun_tables pays. For dry-run cells
+    that only record the seq-sharding resolution."""
+    from repro.core.sparse_attention import pattern_col_extents
+    cols, nval, _, nrb = _dryrun_pattern(cfg, seq_len, layers, max_extent)
+    ext_l, ext_r = pattern_col_extents(cols, nval, ncb=nrb)
+    return [int(ext_l.max()), int(ext_r.max())]
+
+
+def _dryrun_pattern(cfg: ModelConfig, seq_len: int, layers, max_extent):
+    """The deterministic dry-run pattern's forward tables (host numpy)."""
+    import numpy as np
     sp = cfg.spion
     blk = sp.block_size
     nrb = max(seq_len // blk, 1)
@@ -102,14 +135,18 @@ def spion_dryrun_tables(cfg: ModelConfig, seq_len: int, layers: Optional[int] = 
             for v0 in verts:
                 if len(c) >= K:
                     break
-                c.add(int(v0 if not cfg.causal else min(v0 % (r + 1), r)))
+                if max_extent is not None:
+                    v0 = int(np.clip(v0, r - max_extent, r + max_extent))
+                    v0 = int(np.clip(v0, 0, nrb - 1))
+                    c.add(min(v0, r) if cfg.causal else v0)
+                else:
+                    c.add(int(v0 if not cfg.causal else min(v0 % (r + 1), r)))
             cs = sorted(c)[:K]
             cols[l, r, : len(cs)] = cs
             nval[l, r] = len(cs)
             if len(cs) < K:
                 cols[l, r, len(cs):] = cs[-1]          # clamped padding
-    plan = build_sparsity_plan(cols, nval, blk, ncb=nrb)
-    return dict(plan.tables, kt_star=plan.kt_star)
+    return cols, nval, blk, nrb
 
 
 def spion_table_pspecs(tables):
@@ -132,7 +169,7 @@ def spion_table_pspecs(tables):
 
 def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
                     total_steps=10_000, n_micro=1, block=None,
-                    sparse_kernel=None):
+                    sparse_kernel=None, halo=None):
     """Returns f(params_f32, opt_state, batch, step[, tables]) ->
     (params, opt_state, metrics). `spion` adds a BCSR tables argument
     ({'col_idx','nvalid'} arrays, optionally a SparsityPlan's transposed
@@ -149,22 +186,31 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
     dispatch is mesh-aware: traced under an active multi-device mesh
     (mesh_context), "auto"/"fused" route through the shard_map wrapper so
     the kernel and its backward stay sharded on pods
-    (models.attention.resolve_sparse_kernel)."""
+    (models.attention.resolve_sparse_kernel).
+
+    `halo` is the SparsityPlan's STATIC (left, right) column-extent pair
+    (plan stats["halo"]); like `block` it is closed over at build time — an
+    int leaf in the tables arg would turn into a tracer under jit. It
+    unlocks 'seq'-axis sharding of the fused kernel when the mesh has one
+    (DESIGN.md §10); leaving it None just keeps the sequence unsharded."""
     if sparse_kernel is not None:
         cfg = cfg.replace(spion=dataclasses_replace(cfg.spion,
                                                     kernel=sparse_kernel))
     bundle = build(cfg)
     compute_dtype = jnp.dtype(cfg.dtype)
     static_block = block or cfg.spion.block_size
+    static_halo = None if halo is None else (int(halo[0]), int(halo[1]))
 
     def step_fn(params, opt_state, batch, step, tables=None):
         if tables is not None:
-            # rebuild with the STATIC block (an int leaf would be a tracer
-            # under jit) and drop other static scalars (kt_star); thread the
-            # SparsityPlan transposed tables through when supplied so the
-            # fused VJP's dK/dV grid runs at the true pattern width KT*
+            # rebuild with the STATIC block/halo (an int leaf would be a
+            # tracer under jit) and drop other static scalars (kt_star);
+            # thread the SparsityPlan transposed tables through when
+            # supplied so the fused VJP's dK/dV grid runs at the true
+            # pattern width KT*
             tables = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
             tables["block"] = static_block
+            tables["halo"] = static_halo
         def cast(p):
             return jax.tree_util.tree_map(
                 lambda x: x.astype(compute_dtype)
@@ -211,9 +257,11 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
     return functools.partial(step_fn, tables=None)
 
 
-def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None):
+def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None,
+                      halo=None):
     bundle = build(cfg)
     static_block = block or cfg.spion.block_size
+    static_halo = None if halo is None else (int(halo[0]), int(halo[1]))
 
     def prefill(params, batch, tables=None):
         if tables is not None:
@@ -221,6 +269,7 @@ def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None):
             # SparsityPlan payload (incl. int leaves) directly under jit
             tables = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
             tables["block"] = static_block
+            tables["halo"] = static_halo
         logits, _ = bundle.forward(params, batch, spion=tables)
         return logits
 

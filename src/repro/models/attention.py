@@ -127,16 +127,19 @@ def dense_attention(cfg, q, k, v, q_pos, k_pos):
     return out
 
 
-def resolve_sparse_kernel(cfg, batch: int, kv_heads: int) -> str:
+def resolve_sparse_kernel(cfg, batch: int, kv_heads: int, *, nrb=None,
+                          halo=None) -> str:
     """What `cfg.spion.kernel` dispatches to at trace time ("fused"/"jnp").
 
     Mesh-aware: under an active multi-device mesh (distributed.sharding.
     current_mesh()) "auto" picks the shard_map-wrapped fused kernel whenever
     at least one kernel dim shards — batch over the data axes, KV heads
-    over 'model' (kernel_shard_axes) — so sparse training keeps the Pallas
-    kernel and its sparse backward on pods instead of reverting to jnp
-    gathers. This mesh branch is deliberately NOT gated on the TPU backend:
-    CI's virtual-device meshes and the dry-run must exercise the exact
+    over 'model' (kernel_shard_axes), or Q row-blocks over 'seq' when the
+    pattern halo fits (`nrb` row-blocks + the plan's static `halo` extents,
+    kernel_seq_axis) — so sparse training keeps the Pallas kernel and its
+    sparse backward on pods instead of reverting to jnp gathers. This mesh
+    branch is deliberately NOT gated on the TPU backend: CI's
+    virtual-device meshes and the dry-run must exercise the exact
     production dispatch (shard_map + kernel), accepting the Pallas
     interpreter's speed off-TPU — a real multi-host CPU/GPU deployment that
     wants wall-clock should force kernel="jnp". When nothing divides, or
@@ -148,9 +151,11 @@ def resolve_sparse_kernel(cfg, batch: int, kv_heads: int) -> str:
         return impl
     mesh = current_mesh()
     if mesh is not None and mesh.size > 1:
-        from repro.distributed.sharding import kernel_shard_axes
+        from repro.distributed.sharding import (kernel_seq_axis,
+                                                kernel_shard_axes)
         baxes, kv_ax = kernel_shard_axes(mesh, batch, kv_heads)
-        return "fused" if (baxes or kv_ax) else "jnp"
+        seq_ax, _ = kernel_seq_axis(mesh, nrb, halo)
+        return "fused" if (baxes or kv_ax or seq_ax) else "jnp"
     # meshless: the fused kernel compiles through Mosaic only on TPU; with
     # multiple devices but no mesh there is nothing to shard over, so stay
     # on the jnp path (jit places it on the default device either way)
@@ -165,7 +170,10 @@ def spion_sparse_attention(cfg, q, k, v, spion_layer):
     when a host-built SparsityPlan is threaded through the step, the layer's
     precomputed transposed tables {'row_idx': (ncb, KT*), 'nvalid_t': (ncb,)}
     — the fused kernel's dK/dV backward grid then shrinks to the true
-    pattern width KT* and the per-step under-jit bcsr_transpose disappears.
+    pattern width KT* and the per-step under-jit bcsr_transpose disappears —
+    and optionally the STATIC 'halo' (left, right) column-extent pair (plan
+    stats), which unlocks 'seq'-axis sharding under a sequence-parallel
+    mesh (DESIGN.md §10).
     Dispatch follows cfg.spion.kernel (see `resolve_sparse_kernel`): "auto"
     is mesh-aware — the fused differentiable Pallas kernel on single-device
     TPU AND, via the shard_map wrapper, under multi-device meshes whose
@@ -178,12 +186,16 @@ def spion_sparse_attention(cfg, q, k, v, spion_layer):
     """
     bcsr = BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
                 spion_layer["block"], q.shape[1])
-    impl = resolve_sparse_kernel(cfg, q.shape[0], k.shape[2])
+    halo = spion_layer.get("halo")
+    impl = resolve_sparse_kernel(cfg, q.shape[0], k.shape[2],
+                                 nrb=q.shape[1] // spion_layer["block"],
+                                 halo=halo)
     if impl == "fused":
         from repro.kernels.ops import spion_attention_kernel
         return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True,
                                       row_idx=spion_layer.get("row_idx"),
-                                      nvalid_t=spion_layer.get("nvalid_t"))
+                                      nvalid_t=spion_layer.get("nvalid_t"),
+                                      halo=halo)
     return bcsr_attention(cfg, q, k, v, bcsr)
 
 

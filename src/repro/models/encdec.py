@@ -115,8 +115,9 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
                 cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                               capture["filt"], capture["block"])
             if sp is not None:
-                ctx = A.spion_sparse_attention(cfg, q, k, v,
-                                               {**sp, "block": spion["block"]})
+                ctx = A.spion_sparse_attention(
+                    cfg, q, k, v, {**sp, "block": spion["block"],
+                                   "halo": spion.get("halo")})
             else:
                 ctx = A.dense_attention(cfg, q, k, v, positions, positions)
             h = h + A.attn_out(cfg, lp["attn"], ctx)

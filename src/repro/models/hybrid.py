@@ -54,7 +54,8 @@ def _shared_attn_block(cfg, sp, h, positions, bcsr_tables, app_idx, capture):
         cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                       capture["filt"], capture["block"])
     if bcsr_tables is not None:
-        layer = {"block": bcsr_tables["block"]}
+        layer = {"block": bcsr_tables["block"],
+                 "halo": bcsr_tables.get("halo")}
         for name in PLAN_TABLE_KEYS:
             if name in bcsr_tables:
                 layer[name] = jnp.take(bcsr_tables[name], app_idx, axis=0)

@@ -118,7 +118,9 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
 
         def run(h, lp, sp):
             return _block(cfg, lp, h, positions,
-                          None if sp is None else {**sp, "block": spion["block"]},
+                          None if sp is None else
+                          {**sp, "block": spion["block"],
+                           "halo": spion.get("halo")},
                           capture)
         if cfg.remat:
             run = jax.checkpoint(run, prevent_cse=False)

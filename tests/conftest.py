@@ -97,3 +97,22 @@ settings.load_profile("ci")
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def run_subprocess_case(code, devices=4):
+    """Run a multi-device test snippet in a fresh interpreter with `devices`
+    fake host devices (jax locks the device count at first init). Shared by
+    the shard_map suites (test_sharded_attention / test_seq_parallel)."""
+    import pathlib
+    import subprocess
+    import sys as _sys
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    r = subprocess.run(
+        [_sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+             "JAX_PLATFORMS": "cpu",
+             "PATH": "/usr/bin:/bin"},
+        cwd=root, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout

@@ -5,29 +5,13 @@ train-step compile proof on a 2-axis (data, model) mesh.
 All multi-device checks run in subprocesses with 4 fake host devices (jax
 locks the device count at first init — same pattern as
 tests/test_distributed.py)."""
-import subprocess
-import sys
-
 import pytest
+from conftest import run_subprocess_case as _run_sub
 
 from repro.configs import get_config
 from repro.distributed.sharding import kernel_shard_axes
 from repro.launch.mesh import make_mesh
 from repro.models.attention import resolve_sparse_kernel
-
-
-def _run_sub(code, devices=4):
-    import pathlib
-    root = str(pathlib.Path(__file__).resolve().parent.parent)
-    r = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        env={"PYTHONPATH": "src",
-             "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
-             "JAX_PLATFORMS": "cpu",
-             "PATH": "/usr/bin:/bin"},
-        cwd=root, timeout=600)
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
 
 
 def test_kernel_shard_axes_choice():

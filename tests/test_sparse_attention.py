@@ -122,3 +122,74 @@ def test_bcsr_attention_ops_counts_blocks():
     b = bcsr_from_blockmask(mask, blk)
     C = n * blk * blk
     assert bcsr_attention_ops(cfg, b) == 2 * C * (2 * 64 + 1) - L * (64 + 1)
+
+
+# ---------------------------------------------------------------------------
+# SparsityPlan column extents / halo bounds (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.pattern import generate_pattern  # noqa: E402
+from repro.core.sparse_attention import (build_sparsity_plan,  # noqa: E402
+                                         pattern_col_extents)
+
+
+def _spans(mask):
+    """True per-row column span of a dense block mask: (left, right) max."""
+    left = right = 0
+    for r in range(mask.shape[0]):
+        cols = np.nonzero(mask[r])[0]
+        if len(cols):
+            left = max(left, r - int(cols.min()))
+            right = max(right, int(cols.max()) - r)
+    return left, right
+
+
+def _pattern(kind, n, seed, window):
+    rng = np.random.default_rng(seed)
+    if kind == "flood":
+        # pooled-scores stand-in -> the real conv-flood-fill generator
+        pooled = rng.random((n, n)) * np.exp(
+            -np.abs(np.subtract.outer(np.arange(n), np.arange(n))) / 3.0)
+        mask = generate_pattern(None, pooled=pooled, variant="cf",
+                                block_size=1, alpha_quantile=0.8,
+                                causal=False)
+    elif kind == "sliding":
+        i = np.arange(n)
+        mask = (np.abs(np.subtract.outer(i, i)) <= window) & \
+            (rng.random((n, n)) < 0.8)
+        np.fill_diagonal(mask, True)
+    else:  # causal random
+        mask = np.tril(rng.random((n, n)) < 0.4)
+        np.fill_diagonal(mask, True)
+    return np.asarray(mask, bool)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.integers(4, 24),
+       st.sampled_from(["flood", "sliding", "causal"]), st.integers(1, 4),
+       st.integers(1, 3))
+def test_plan_halo_upper_bounds_every_row_span(seed, n, kind, window, layers):
+    """The host-computed per-layer col_extent (and the cross-layer halo) must
+    upper-bound every BCSR row's true column span — the invariant the
+    seq-parallel halo exchange relies on: a row-block never references a
+    column-block outside [r - halo_left, r + halo_right]."""
+    masks = [_pattern(kind, n, seed + i, window) for i in range(layers)]
+    K = max(max(int(m.sum(axis=1).max()), 1) for m in masks)
+    tabs = [bcsr_from_blockmask(m, 16, max_k=K) for m in masks]
+    col = np.stack([np.asarray(t.col_idx) for t in tabs])
+    nv = np.stack([np.asarray(t.nvalid) for t in tabs])
+    ext_l, ext_r = pattern_col_extents(col, nv, ncb=n)
+    plan = build_sparsity_plan(col, nv, 16, ncb=n)
+    halo = plan.stats["halo"]
+    assert list(halo) == [int(ext_l.max()), int(ext_r.max())]
+    for li, m in enumerate(masks):
+        span_l, span_r = _spans(m)
+        assert ext_l[li] >= span_l, (kind, li, ext_l[li], span_l)
+        assert ext_r[li] >= span_r, (kind, li, ext_r[li], span_r)
+        assert halo[0] >= span_l and halo[1] >= span_r
+        # and the bound is TIGHT for the raw tables (no mask config given)
+        assert ext_l[li] == span_l and ext_r[li] == span_r
+    assert plan.stats["col_extent_left"] == [int(x) for x in ext_l]
+    assert plan.stats["col_extent_right"] == [int(x) for x in ext_r]

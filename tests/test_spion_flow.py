@@ -240,3 +240,58 @@ def test_lsh_attention_baseline_shape_and_locality():
     out = lsh_attention(q, q, q, num_hashes=2, bucket_size=32)
     assert out.shape == q.shape
     assert not bool(jnp.isnan(out).any())
+
+
+def test_spion_kwargs_gated_on_cfg_enabled(rng):
+    """A sparse-phase state restored under a SPION-disabled config must NOT
+    inject the tables into the step (regression: spion_kwargs ignored
+    cfg.enabled, so restore-with-disabled-config silently trained sparse)."""
+    ctl = _controller()
+    st = SpionState()
+    for _ in range(3):
+        st = ctl.observe_epoch(st, _pooled(rng), np.array([1.0, 1.0]))
+    assert st.phase == "sparse" and st.tables is not None
+    assert ctl.spion_kwargs(st) is not None
+    disabled = SpionController(
+        SpionConfig(enabled=False, variant="cf", conv_filter_size=7,
+                    block_size=16), causal=False, seq_len=64)
+    assert disabled.spion_kwargs(st) is None
+    # the capture path was already gated; keep them consistent
+    assert disabled.capture_kwargs(SpionState()) is None
+
+
+def test_from_py_arrays_without_tables_fails_loudly(rng):
+    """Plan arrays supplied against a state dict with neither 'tables' nor
+    'tables_meta' is a mismatched checkpoint pair; silently dropping the
+    arrays used to resume the sparse phase with tables=None (dense steps
+    forever). Must raise instead."""
+    ctl = _controller()
+    st = SpionState()
+    for _ in range(3):
+        st = ctl.observe_epoch(st, _pooled(rng), np.array([1.0, 1.0]))
+    arrays = st.table_arrays()
+    d = st.to_py(include_tables=False)
+    del d["tables_meta"]
+    with pytest.raises(ValueError, match="neither 'tables' nor 'tables_meta'"):
+        SpionState.from_py(d, arrays)
+    # arrays=None with a plain dense-state dict still restores fine
+    dense = SpionState().to_py()
+    assert SpionState.from_py(dense).tables is None
+
+
+def test_plan_stats_carry_halo_extents(rng):
+    """Pattern generation records the seq-parallel halo bounds (DESIGN.md
+    §10) so the trainer can rebuild the sparse step with the static halo."""
+    ctl = _controller()
+    st = SpionState()
+    for _ in range(3):
+        st = ctl.observe_epoch(st, _pooled(rng), np.array([1.0, 1.0]))
+    stats = st.plan_stats
+    Ly = st.tables["col_idx"].shape[0]
+    assert len(stats["col_extent_left"]) == Ly
+    assert len(stats["col_extent_right"]) == Ly
+    assert stats["halo"] == [max(stats["col_extent_left"]),
+                             max(stats["col_extent_right"])]
+    # round-trips through the JSON checkpoint channel unchanged
+    st2 = SpionState.from_py(st.to_py())
+    assert st2.plan_stats["halo"] == stats["halo"]
