@@ -18,6 +18,10 @@ perf history that CI uploads as an artifact.
   seqshard         sparse train step on a (seq=2, data=2) mesh: the
                    sequence-parallel halo-exchange dispatch — halo width,
                    ppermute proof, jnp vs seq-sharded-fused rows
+  serve            continuous-batching engine throughput (fused prefill +
+                   per-slot-position decode tokens/s) and dense-vs-sparse
+                   decode_step at S_cache in {1k, 4k} — the pattern-bounded
+                   cache gather must beat dense at >= 4k
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
@@ -71,15 +75,18 @@ def _mods(smoke):
         rows=functools.partial(mha_breakdown.sharded_rows, smoke=smoke))
     seqshard = SimpleNamespace(
         rows=functools.partial(mha_breakdown.seqshard_rows, smoke=smoke))
+    serve = SimpleNamespace(
+        rows=functools.partial(mha_breakdown.serve_rows, smoke=smoke))
     if smoke:
         breakdown = SimpleNamespace(
             rows=functools.partial(mha_breakdown.rows, L=256))
         return [("opcount", opcount), ("mha_breakdown", breakdown),
                 ("train_step", train_step), ("bwd", bwd),
-                ("sharded", sharded), ("seqshard", seqshard)]
+                ("sharded", sharded), ("seqshard", seqshard),
+                ("serve", serve)]
     return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
             ("train_step", train_step), ("bwd", bwd), ("sharded", sharded),
-            ("seqshard", seqshard),
+            ("seqshard", seqshard), ("serve", serve),
             ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),
             ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]

@@ -350,6 +350,91 @@ def _bcsr_rows(cfg, q, k, v, bcsr: BCSR, row_offset):
     return out.reshape(B, Sq, H, hd)
 
 
+def sparse_decode_attention(cfg, q, k_cache, v_cache, pos, col_idx, nvalid,
+                            *, block: int, ring: bool = False):
+    """One-token sparse decode: attend over ONLY the KV-cache blocks the
+    pattern lists for the query position's row-block (DESIGN.md §11).
+
+    q (B,1,H,hd); caches (B,S,KV,hd); pos scalar or (B,) per-row absolute
+    positions; col_idx (nrb, K) / nvalid (nrb,) — one layer's forward BCSR.
+    The row-block `pos // block` selects at most K column blocks; those
+    K*block cache slots are gathered and attended, so decode cost is
+    O(K*block) instead of O(S_cache) — the inference payoff of the
+    layer-wise pattern.
+
+    Semantics match the sparse prefill exactly (paper Alg. 6 line 15):
+    pruned causal positions contribute exp(0 - max) each to the softmax
+    denominator, so a token decoded at position p produces the same
+    distribution the sparse forward produces at row p (tested). Where the
+    listed blocks cover every visible position the correction vanishes and
+    sparse decode equals DENSE decode to kernel tolerances.
+
+    ring=True for sliding-window ring-buffer caches (cache slot of absolute
+    position p is p % S; S must be a multiple of `block`): listed column
+    blocks wrap into storage blocks mod S/block, and positions that have
+    rotated out of the ring are masked. Rows past the table (pos >= nrb *
+    block — generation beyond the pattern's coverage) clamp to the last
+    row-block; serving callers should size the plan to cover the cache
+    (launch/serve.ServeEngine enforces it). Decode is causal by
+    construction (a cache never holds the future), so the row total is
+    pos + 1 (clipped by the sliding window) regardless of cfg.causal."""
+    B, _, H, hd = q.shape
+    KV, S = k_cache.shape[2], k_cache.shape[1]
+    G = H // KV
+    nbc = S // block
+    nrb, Kp = col_idx.shape
+    posb = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (B,)) \
+        .astype(jnp.int32)
+    rb = jnp.clip(posb // block, 0, nrb - 1)
+    cols = col_idx[rb]                                    # (B, K)
+    nval = nvalid[rb]                                     # (B,)
+    valid = (jnp.arange(Kp)[None, :] < nval[:, None]) & (cols >= 0)
+    colc = jnp.clip(cols, 0, None)
+    if ring:
+        sb = colc % nbc
+    else:
+        # append cache: blocks beyond the cache don't exist — mask, never alias
+        valid = valid & (colc < nbc)
+        sb = jnp.minimum(colc, nbc - 1)
+    kb = k_cache.reshape(B, nbc, block, KV, hd)
+    vb = v_cache.reshape(B, nbc, block, KV, hd)
+    idx = sb[:, :, None, None, None]
+    kg = jnp.take_along_axis(kb, idx, axis=1).astype(q.dtype)  # (B,K,blk,KV,hd)
+    vg = jnp.take_along_axis(vb, idx, axis=1).astype(q.dtype)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bcqkh->bkgcq", qg, kg).astype(jnp.float32) / np.sqrt(hd)
+    # absolute positions the gathered slots are *supposed* to hold
+    kpos = (colc * block)[:, :, None] + jnp.arange(block)[None, None, :]
+    ok = valid[:, :, None] & (kpos >= 0) & (kpos <= posb[:, None, None])
+    if cfg.sliding_window:
+        ok = ok & (kpos > posb[:, None, None] - cfg.sliding_window)
+    if ring:
+        # the ring holds only the last S positions; older ones were overwritten
+        ok = ok & (kpos > posb[:, None, None] - S)
+    s = jnp.where(ok[:, None, None], s, -jnp.inf)
+    sflat = s.reshape(B, KV, G, Kp * block)
+    mx = jnp.maximum(jnp.max(sflat, axis=-1, keepdims=True), -1e30)
+    ex = jnp.where(jnp.isneginf(sflat), 0.0, jnp.exp(sflat - mx))
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    # Alg. 6 zero-correction: pruned visible positions count exp(-max) each
+    stored = jnp.sum(ok, axis=(1, 2)).astype(jnp.int32)   # (B,)
+    row_total = posb + 1
+    if cfg.sliding_window:
+        row_total = jnp.minimum(row_total, cfg.sliding_window)
+    if ring:
+        # positions that rotated out of the ring are GONE, not pruned: the
+        # dense ring decode renormalises over what the cache holds, and a
+        # ring shorter than the window must match it, not the full-window
+        # prefill it can no longer represent
+        row_total = jnp.minimum(row_total, S)
+    zeros_cnt = jnp.maximum(row_total - stored, 0)[:, None, None, None] \
+        .astype(jnp.float32)
+    denom = denom + zeros_cnt * jnp.exp(-mx)
+    probs = (ex / denom).astype(q.dtype).reshape(B, KV, G, Kp, block)
+    out = jnp.einsum("bkgcq,bcqkh->bkgh", probs, vg)
+    return out.reshape(B, 1, H, hd)
+
+
 def bcsr_attention_ops(cfg, bcsr: BCSR):
     """Analytic op count of the sparse path (paper §4.4 formula, per head):
     2*C*(2*hd+1) - L*(hd+1) with C = stored element count."""

@@ -136,6 +136,25 @@ class SpionController:
             return state.tables
         return None
 
+    def attention_exec(self, state: SpionState, phase: str = "train"):
+        """The sparse phase's SparseAttentionExec (None in the dense phase
+        or when SPION is disabled — same gating as `spion_kwargs`).
+
+        The exec is the single owner of the plan arrays AND the static
+        block/halo metadata (core/attention_exec.py): passed straight into
+        a jitted step, its statics ride the pytree aux_data, so a new
+        plan's halo retraces the step without the trainer tracking it.
+        `phase="decode"` yields the serving engine's sparse-decode exec
+        from the same training plan — the train -> serve handoff is one
+        constructor call."""
+        tables = self.spion_kwargs(state)
+        if tables is None:
+            return None
+        from repro.core.attention_exec import SparseAttentionExec
+        halo = (state.plan_stats or {}).get("halo")
+        return SparseAttentionExec(tables, block=tables["block"], halo=halo,
+                                   phase=phase)
+
     # -- per-epoch update (paper Alg. 2 lines 7-12) ----------------------------
 
     def observe_epoch(self, state: SpionState, pooled: np.ndarray,

@@ -29,6 +29,7 @@ from repro.distributed.sharding import (mesh_context, param_pspecs,  # noqa: E40
 from repro.launch import hlo  # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,  # noqa: E402
                                make_production_mesh)
+from repro.core.attention_exec import SparseAttentionExec  # noqa: E402
 from repro.core.sparse_attention import PLAN_TABLE_KEYS  # noqa: E402
 from repro.launch.steps import (batch_pspecs, cache_pspecs, make_prefill_step,  # noqa: E402
                                 make_serve_step, make_train_step,
@@ -90,20 +91,21 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
                    "count": P()}
             osp_ns = _ns(mesh, osp)
             step_fn = make_train_step(cfg, spion=(mode == "sparse"),
-                                      n_micro=n_micro,
-                                      halo=None if tables is None
-                                      else tables.get("halo"))
+                                      n_micro=n_micro)
             args = [params, opt, specs, jax.ShapeDtypeStruct((), jnp.int32)]
             in_sh = [psp_ns, osp_ns, bsp_ns, rep]
             out_sh = (psp_ns, osp_ns, {"loss": rep, "gnorm": rep, "lr": rep})
             if mode == "sparse":
-                blk = tables["block"]
+                # the exec carries the STATIC block/halo as pytree aux, so
+                # the cell compiles the exact production step signature
+                blk, halo = tables["block"], tables.get("halo")
 
                 def fn(p, o, b, s, col, nv, row, nvt):
-                    return step_fn(p, o, b, s,
-                                   {"col_idx": col, "nvalid": nv,
-                                    "row_idx": row, "nvalid_t": nvt,
-                                    "block": blk})
+                    ex = SparseAttentionExec(
+                        {"col_idx": col, "nvalid": nv,
+                         "row_idx": row, "nvalid_t": nvt},
+                        block=blk, halo=halo, phase="train")
+                    return step_fn(p, o, b, s, ex)
                 args += [jax.ShapeDtypeStruct(tables[k].shape, jnp.int32)
                          for k in PLAN_TABLE_KEYS]
                 in_sh += [rep, rep, rep, rep]
@@ -114,9 +116,7 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
                              donate_argnums=(0, 1))
             return jf, args
         # prefill
-        step_fn = make_prefill_step(cfg, spion=(mode == "sparse"),
-                                    halo=None if tables is None
-                                    else tables.get("halo"))
+        step_fn = make_prefill_step(cfg, spion=(mode == "sparse"))
         S_out = shape.seq_len
         logits_sh = NamedSharding(mesh, sanitize_spec(
             mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names),
@@ -125,12 +125,14 @@ def build_cell(cfg, shape, mesh, mode, n_micro=1):
         args = [params_bf, specs]
         in_sh = [psp_ns, bsp_ns]
         if mode == "sparse":
-            blk = tables["block"]
+            blk, halo = tables["block"], tables.get("halo")
 
             def fn(p, b, col, nv, row, nvt):
-                return step_fn(p, b, {"col_idx": col, "nvalid": nv,
-                                      "row_idx": row, "nvalid_t": nvt,
-                                      "block": blk})
+                ex = SparseAttentionExec(
+                    {"col_idx": col, "nvalid": nv,
+                     "row_idx": row, "nvalid_t": nvt},
+                    block=blk, halo=halo, phase="prefill")
+                return step_fn(p, b, ex)
             args += [jax.ShapeDtypeStruct(tables[k].shape, jnp.int32)
                      for k in PLAN_TABLE_KEYS]
             in_sh += [rep, rep, rep, rep]

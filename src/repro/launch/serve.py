@@ -1,19 +1,46 @@
-"""Batched serving driver: synchronous continuous batching over a KV cache.
+"""Continuous-batching serving engine over a slot-structured KV cache.
 
-Requests queue up; each engine tick either prefills a waiting request into a
-free cache slot or decodes one token for every active slot. The decode step
-is the same serve_step the dry-run lowers for decode_32k / long_500k.
+Each engine tick admits waiting requests into free cache slots — fused
+prefill (make_prefill_step(with_cache=True): one full-sequence forward whose
+per-layer RoPE'd K/V are inserted straight into the slot) — then decodes ONE
+token for every active slot in a single batched decode_step with PER-SLOT
+positions: requests of different lengths decode at their own offsets, finish
+independently, and their slots are reclaimed and refilled mid-decode.
+
+Sparse serving (DESIGN.md §11): pass the training run's SparsityPlan (or its
+tables payload) as `spion=` and both phases use it — the prefill runs the
+same block-sparse attention the sparse training phase runs, and decode
+gathers only the cache blocks the query position's pattern row lists
+(core.sparse_attention.sparse_decode_attention), composing with the
+sliding-window ring buffer. The plan must cover the positions the engine
+will ever decode (`SparseAttentionExec.coverage >= prompt + max_new`).
+
+Cache hygiene, by construction rather than by care:
+  - prefill is per-request (B=1) and the batched decode writes each row at
+    its own slot/position (models.attention.update_cache vector form), so
+    one request can never write into another's cache row — the old engine's
+    padded-prompt pollution (shorter prompts re-feeding their last token
+    every tick) is structurally impossible;
+  - padding junk the fused prefill writes past the prompt length is dead:
+    a position is only ever read after the decode loop has overwritten it
+    (every decode tick writes its K/V at `pos` before attending), and ring
+    slots holding stale positions are masked by the ring position
+    arithmetic.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.attention_exec import SparseAttentionExec
+from repro.core.sparse_attention import SparsityPlan
+from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models.registry import build
 
 
@@ -24,70 +51,239 @@ class Request:
     max_new: int = 16
     out: Optional[list] = None
     done: bool = False
+    slot: Optional[int] = None
     t_submit: float = 0.0
-    t_first: float = 0.0
+    t_first: float = 0.0         # stamped when THIS request's first token lands
     t_done: float = 0.0
 
 
 class ServeEngine:
-    """Slot-based batched decode; prefill via repeated decode_step (prefill
-    jit) for simplicity — a production engine would use the fused prefill."""
+    """Continuous batching with per-slot positions and fused prefill.
 
-    def __init__(self, cfg, params, *, slots=4, max_len=512):
+    spion: None | SparsityPlan | tables payload | SparseAttentionExec —
+    enables sparse prefill AND pattern-bounded sparse decode from the same
+    layer-wise plan the training run produced.
+    prefill_bucket: prompts pad up to a multiple of this before the fused
+    prefill (bounding jit retraces to one per bucket); causality makes the
+    padding free and the junk K/V it writes is never read (see module
+    docstring). Sparse plans prefill at the same bucketed length — the
+    stacked row tables slice to the prompt's row-blocks
+    (_sparse_prefill_exec; self-contained because the fused path is
+    causal-only), so admission stays O(prompt), not O(plan coverage).
+    Families without a plain KV cache (ssm/hybrid) prefill stepwise into a
+    fresh B=1 cache that is then written into the slot — per-request, so
+    mixed prompt lengths still cannot cross-pollute.
+    """
+
+    def __init__(self, cfg, params, *, slots=4, max_len=512, spion=None,
+                 prefill_bucket=32):
         self.cfg = cfg
         self.bundle = build(cfg)
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+
+        self.exec: Optional[SparseAttentionExec] = None
+        self._prefill_exec = None
+        if spion is not None:
+            if isinstance(spion, SparsityPlan):
+                ex = SparseAttentionExec.from_plan(spion, phase="decode")
+            else:
+                ex = SparseAttentionExec.coerce(spion, phase="decode")
+            self.exec = ex
+            self._prefill_exec = SparseAttentionExec.coerce(ex, phase="prefill")
+
         self.cache = self.bundle.init_cache(slots, max_len)
-        self.pos = np.zeros((slots,), np.int64) - 1  # -1 = free
+        # per-slot NEXT decode position. Freeness is `active[s] is None`;
+        # a reclaimed slot's pos stays parked at its final value — the
+        # batched decode still writes an (unread) K/V row for idle slots
+        # each tick, and parking it at the one position the finished
+        # request never wrote (P + max_new - 1: the last generated token is
+        # never fed back) keeps the request's written cache region
+        # byte-stable after completion instead of scribbling on position 0.
+        self.pos = np.full((slots,), -1, np.int64)
         self.active: List[Optional[Request]] = [None] * slots
-        self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,))
+        self.waiting: Deque[Request] = collections.deque()
+
+        self._decode = jax.jit(
+            make_serve_step(cfg, spion=True), donate_argnums=(1,))
+        self._can_fuse = (self.bundle.prefill_kv is not None and cfg.causal
+                          and not cfg.num_patch_tokens)
+        if self._can_fuse:
+            self._prefill = jax.jit(
+                make_prefill_step(cfg, spion=True, with_cache=True))
+            self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        else:
+            self._decode1 = jax.jit(make_serve_step(cfg, spion=True))
+
+    # -- request lifecycle ----------------------------------------------------
 
     def submit(self, req: Request):
+        """Queue a request; it is admitted into a slot (prefilled) at the
+        next engine tick with one free."""
         req.t_submit = time.time()
-        for s in range(self.slots):
-            if self.active[s] is None:
-                self.active[s] = req
-                req.out = []
-                self.pos[s] = 0
-                return s
-        raise RuntimeError("no free slot")
+        req.out = []
+        P = len(req.prompt)
+        if P < 1:
+            raise ValueError("prompt must have at least one token (the first "
+                             "generated token is the argmax at its last "
+                             "position)")
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if not self.cfg.sliding_window and P + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({P}) + max_new ({req.max_new}) "
+                f"exceeds the cache length ({self.max_len})")
+        if self.exec is not None and P + req.max_new > self.exec.coverage:
+            raise ValueError(
+                f"request {req.rid}: prompt ({P}) + max_new ({req.max_new}) "
+                f"exceeds the sparsity plan's coverage "
+                f"({self.exec.coverage} positions = nrb * block); build the "
+                f"plan at the serving sequence length")
+        self.waiting.append(req)
 
-    def _step_token(self, tokens, pos):
-        """tokens (slots,1); single shared pos per tick (synchronous)."""
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens), jnp.int32(pos))
-        return np.asarray(jnp.argmax(logits, -1))
+    def step(self):
+        """One engine tick: admit waiting requests into free slots (each one
+        prefilled into its slot), then decode one token for every active
+        slot at its own position."""
+        self._admit()
+        if any(r is not None for r in self.active):
+            self._decode_tick()
 
-    def run(self, requests: List[Request], greedy=True):
-        """Synchronous batch: all requests padded to the same prompt cadence."""
+    def run(self, requests: List[Request]):
+        """Drive `requests` (any count vs slot count) to completion."""
         for r in requests:
             self.submit(r)
-        maxp = max(len(r.prompt) for r in requests)
-        # prefill (token-by-token teacher forcing into the caches)
-        tok = np.zeros((self.slots, 1), np.int32)
-        nxt = np.zeros((self.slots,), np.int32)
-        for t in range(maxp):
-            for s, r in enumerate(self.active):
-                if r is not None:
-                    tok[s, 0] = r.prompt[min(t, len(r.prompt) - 1)]
-            nxt = self._step_token(tok, t)
-        for r in requests:
-            r.t_first = time.time()
-        # decode
-        for j in range(max(r.max_new for r in requests)):
-            for s, r in enumerate(self.active):
-                if r is not None and not r.done:
-                    tok[s, 0] = nxt[s]
-                    r.out.append(int(nxt[s]))
-                    if len(r.out) >= r.max_new:
-                        r.done = True
-                        r.t_done = time.time()
-            if all(r is None or r.done for r in self.active):
-                break
-            nxt = self._step_token(tok, maxp + j)
-        for s in range(self.slots):
-            self.active[s] = None
-            self.pos[s] = -1
+        while self.waiting or any(r is not None for r in self.active):
+            self.step()
         return requests
+
+    # -- internals ------------------------------------------------------------
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.waiting and self.active[s] is None:
+                r = self.waiting.popleft()
+                first = self._prefill_into(r, s)
+                r.slot = s
+                r.out.append(first)
+                r.t_first = time.time()
+                self.active[s] = r
+                self.pos[s] = len(r.prompt)
+                if len(r.out) >= r.max_new:
+                    self._finish(r, s)
+
+    def _finish(self, r: Request, s: int):
+        r.done = True
+        r.t_done = time.time()
+        self.active[s] = None
+
+    def _decode_tick(self):
+        tok = np.zeros((self.slots, 1), np.int32)
+        posv = np.zeros((self.slots,), np.int32)
+        for s, r in enumerate(self.active):
+            posv[s] = max(self.pos[s], 0)   # idle slots park (see __init__)
+            if r is not None:
+                tok[s, 0] = r.out[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tok), jnp.asarray(posv),
+            self.exec)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            if len(r.out) >= r.max_new:
+                self._finish(r, s)
+
+    def _prefill_len(self, P: int) -> int:
+        if self.exec is not None:
+            # sparse plans prefill at a bucketed length too: the row tables
+            # slice to the first Sp/block row-blocks (_sparse_prefill_exec),
+            # so admission cost is O(prompt bucket), not O(plan coverage).
+            # (The fused path is causal-only — _can_fuse — so the slice is
+            # always self-contained.)
+            blk = self.exec.block
+            b = ((max(self.prefill_bucket, blk) + blk - 1) // blk) * blk
+            return min(max(((P + b - 1) // b) * b, b), self.exec.coverage)
+        b = self.prefill_bucket
+        return max(((P + b - 1) // b) * b, b)
+
+    def _sparse_prefill_exec(self, Sp: int):
+        """The prefill-phase exec for a padded prompt of length Sp: slice
+        the stacked forward tables to the first Sp/block row-blocks —
+        every listed column of a causal row r is <= r, so the sliced
+        tables are self-contained (the fused path is causal-only). The
+        transposed row_idx/nvalid_t are dropped rather than re-sliced:
+        they only feed the fused kernel's dK/dV backward grid, and serving
+        prefill never differentiates."""
+        ex = self._prefill_exec
+        if Sp >= ex.coverage:
+            return ex
+        nrb = Sp // ex.block
+        tabs = {"col_idx": ex.tables["col_idx"][:, :nrb],
+                "nvalid": ex.tables["nvalid"][:, :nrb]}
+        return SparseAttentionExec(tabs, block=ex.block, halo=ex.halo,
+                                   phase="prefill", kernel=ex.kernel)
+
+    def _prefill_into(self, r: Request, s: int) -> int:
+        """Prefill request `r` into cache slot `s`; returns its first
+        generated token (argmax of the last prompt position's logits —
+        which is when t_first is stamped, per request)."""
+        P = len(r.prompt)
+        if self._can_fuse:
+            Sp = self._prefill_len(P)
+            toks = np.zeros((1, Sp), np.int32)
+            toks[0, :P] = r.prompt
+            pex = None if self._prefill_exec is None \
+                else self._sparse_prefill_exec(Sp)
+            logits, ks, vs = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, pex)
+            self.cache = self._insert(self.cache, ks, vs, jnp.int32(s),
+                                      jnp.int32(P))
+            return int(jnp.argmax(logits[0, P - 1]))
+        # stepwise fallback (ssm/hybrid states): teacher-force the prompt
+        # through a FRESH B=1 cache — per-request, so no other slot is
+        # touched and no stale state leaks in — then write the slot slice
+        sub = self.bundle.init_cache(1, self.max_len)
+        logits = None
+        for t in range(P):
+            logits, sub = self._decode1(
+                self.params, sub, jnp.asarray([[r.prompt[t]]], np.int32),
+                jnp.int32(t), self.exec)
+        self.cache = jax.tree_util.tree_map(
+            lambda c, u: jax.lax.dynamic_update_slice_in_dim(c, u, s, axis=1),
+            self.cache, sub)
+        return int(jnp.argmax(logits[0]))
+
+    def _insert_fn(self, cache, ks, vs, slot, plen):
+        """Write a prefilled request's K/V stack (L, 1, Sp, KV, hd) into
+        cache slot `slot`. Append caches take positions [0, min(Sp, S));
+        sliding-window ring caches take, for each ring slot s, the LATEST
+        prompt position congruent to s (mod S) — the same layout the
+        decode-time ring writer produces."""
+        kc, vc = cache["k"], cache["v"]
+        L, S = kc.shape[0], kc.shape[2]
+        Sp = ks.shape[2]
+        if self.cfg.sliding_window:
+            s = jnp.arange(S)
+            p = s + ((plen - 1 - s) // S) * S     # latest pos = s (mod S), < plen
+            valid = (p >= 0) & (p < Sp)
+            pc = jnp.clip(p, 0, Sp - 1)
+            knew = jnp.take(ks, pc, axis=2).astype(kc.dtype)
+            vnew = jnp.take(vs, pc, axis=2).astype(vc.dtype)
+            tail = kc.shape[3:]
+            old_k = jax.lax.dynamic_slice(kc, (0, slot, 0, 0, 0), (L, 1, S) + tail)
+            old_v = jax.lax.dynamic_slice(vc, (0, slot, 0, 0, 0), (L, 1, S) + tail)
+            m = valid[None, None, :, None, None]
+            knew = jnp.where(m, knew, old_k)
+            vnew = jnp.where(m, vnew, old_v)
+        else:
+            take = min(Sp, S)
+            knew = ks[:, :, :take].astype(kc.dtype)
+            vnew = vs[:, :, :take].astype(vc.dtype)
+        kc = jax.lax.dynamic_update_slice(kc, knew, (0, slot, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vnew, (0, slot, 0, 0, 0))
+        return dict(cache, k=kc, v=vc)

@@ -13,6 +13,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.attention_exec import SparseAttentionExec
 from repro.core.sparse_attention import PLAN_TABLE_KEYS
 from repro.distributed.sharding import (data_axes, param_pspecs, sanitize_spec,
                                          zero1_pspecs)
@@ -149,6 +150,26 @@ def _dryrun_pattern(cfg: ModelConfig, seq_len: int, layers, max_extent):
     return cols, nval, blk, nrb
 
 
+def causal_band_tables(layers: int, nrb: int, width: Optional[int] = None):
+    """Stacked causal stand-in forward tables (host numpy) for serving
+    demos, benches and tests: each row-block lists its last `width` column
+    blocks (width=None -> all of them: full causal coverage, the
+    sparse-equals-dense case). Clamped padding past the valid prefix,
+    matching the bcsr_from_blockmask convention. ONE builder on purpose —
+    bench/example/test stand-ins must not drift from each other."""
+    import numpy as np
+    K = nrb if width is None else width
+    col = np.zeros((layers, nrb, K), np.int32)
+    nval = np.zeros((layers, nrb), np.int32)
+    for r in range(nrb):
+        lo = 0 if width is None else max(r - width + 1, 0)
+        cs = list(range(lo, r + 1))
+        col[:, r, : len(cs)] = cs
+        col[:, r, len(cs):] = cs[-1]
+        nval[:, r] = len(cs)
+    return {"col_idx": col, "nvalid": nval}
+
+
 def spion_table_pspecs(tables):
     """Replicated specs for every array leaf; None for static ints
     (block / kt_star) — the plan tables are kilobytes, broadcast whole.
@@ -158,9 +179,30 @@ def spion_table_pspecs(tables):
     (kernels/sharded.py) — the tables index the full, unsharded sequence
     axis, so every shard needs the whole table. Feeding them in already
     replicated means the shard_map boundary is a no-op instead of an
-    all-gather."""
+    all-gather.
+
+    Accepts the dict payload or a SparseAttentionExec (tree_map'd leaf-wise:
+    its statics live in aux_data, so every leaf is an array)."""
+    if isinstance(tables, SparseAttentionExec):
+        return jax.tree_util.tree_map(lambda _: P(), tables)
     return {k: (P() if hasattr(v, "shape") else None)
             for k, v in tables.items()}
+
+
+def _coerce_step_tables(tables, *, block, halo, phase):
+    """Normalise a step's sparse-tables argument to a SparseAttentionExec.
+
+    An exec passes through untouched (it carries its own static metadata as
+    pytree aux, so it crosses jit boundaries intact). The legacy dict
+    payload is rebuilt with the STATIC block/halo closed over at step-build
+    time — its own int leaves would be tracers under jit — and filtered to
+    the PLAN_TABLE_KEYS arrays (dropping static scalars like kt_star)."""
+    if tables is None:
+        return None
+    if isinstance(tables, SparseAttentionExec):
+        return tables
+    arrays = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
+    return SparseAttentionExec(arrays, block=block, halo=halo, phase=phase)
 
 
 # ---------------------------------------------------------------------------
@@ -171,12 +213,15 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
                     total_steps=10_000, n_micro=1, block=None,
                     sparse_kernel=None, halo=None):
     """Returns f(params_f32, opt_state, batch, step[, tables]) ->
-    (params, opt_state, metrics). `spion` adds a BCSR tables argument
-    ({'col_idx','nvalid'} arrays, optionally a SparsityPlan's transposed
-    {'row_idx','nvalid_t'} — then the fused sparse backward runs its dK/dV
-    grid at the plan width KT* with no under-jit transpose; the block size
-    is STATIC via `block` / cfg.spion.block_size — an int leaf would turn
-    into a tracer under jit).
+    (params, opt_state, metrics). `spion` adds a sparse-tables argument:
+    either a SparseAttentionExec (preferred — its static block/halo ride
+    the pytree aux_data, so a changed plan retraces with no caller
+    bookkeeping; SpionController.attention_exec builds it) or the legacy
+    dict payload ({'col_idx','nvalid'} arrays, optionally a SparsityPlan's
+    transposed {'row_idx','nvalid_t'} — then the fused sparse backward runs
+    its dK/dV grid at the plan width KT* with no under-jit transpose; the
+    block size is STATIC via `block` / cfg.spion.block_size — an int leaf
+    would turn into a tracer under jit).
     n_micro > 1 scans microbatches with gradient accumulation (activation
     memory scales ~1/n_micro; the standard large-scale fit knob).
 
@@ -202,15 +247,14 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
     static_halo = None if halo is None else (int(halo[0]), int(halo[1]))
 
     def step_fn(params, opt_state, batch, step, tables=None):
-        if tables is not None:
-            # rebuild with the STATIC block/halo (an int leaf would be a
-            # tracer under jit) and drop other static scalars (kt_star);
-            # thread the SparsityPlan transposed tables through when
-            # supplied so the fused VJP's dK/dV grid runs at the true
-            # pattern width KT*
-            tables = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
-            tables["block"] = static_block
-            tables["halo"] = static_halo
+        # single owner of the sparse-attention state: dict payloads become
+        # a SparseAttentionExec with the STATIC block/halo closed over at
+        # build time; an exec argument (launch/train.Trainer) passes
+        # through with its own statics in the pytree aux — so a new plan's
+        # halo retraces the step with no caller-side rebuild tracking
+        tables = _coerce_step_tables(tables, block=static_block,
+                                     halo=static_halo, phase="train")
+
         def cast(p):
             return jax.tree_util.tree_map(
                 lambda x: x.astype(compute_dtype)
@@ -258,19 +302,28 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
 
 
 def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None,
-                      halo=None):
+                      halo=None, with_cache=False):
+    """Prefill step: logits over the full prompt. `with_cache=True` builds
+    the FUSED serving prefill instead — (params, batch[, tables]) ->
+    (logits, ks, vs) with ks/vs the per-layer RoPE'd K/V stacked
+    (L, B, S, KV, hd), ready for direct insertion into decode-cache slots
+    (launch/serve.ServeEngine) — no token-by-token teacher forcing and no
+    padded-prompt cache pollution. Families without a plain KV cache have
+    no fused prefill (bundle.prefill_kv is None) and raise here."""
     bundle = build(cfg)
     static_block = block or cfg.spion.block_size
     static_halo = None if halo is None else (int(halo[0]), int(halo[1]))
+    if with_cache and bundle.prefill_kv is None:
+        raise NotImplementedError(
+            f"make_prefill_step(with_cache=True): family {cfg.family!r} has "
+            f"no fused KV prefill; serve it via stepwise prefill instead")
 
     def prefill(params, batch, tables=None):
-        if tables is not None:
-            # same static-block rebuild as make_train_step: accept the full
-            # SparsityPlan payload (incl. int leaves) directly under jit
-            tables = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
-            tables["block"] = static_block
-            tables["halo"] = static_halo
-        logits, _ = bundle.forward(params, batch, spion=tables)
+        ex = _coerce_step_tables(tables, block=static_block,
+                                 halo=static_halo, phase="prefill")
+        if with_cache:
+            return bundle.prefill_kv(params, batch, spion=ex)
+        logits, _ = bundle.forward(params, batch, spion=ex)
         return logits
 
     if spion:
@@ -278,12 +331,23 @@ def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None,
     return functools.partial(prefill, tables=None)
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, *, spion=False, block=None, halo=None):
+    """Decode step: (params, cache, tokens, pos[, tables]) -> (logits,
+    cache). `pos` may be a scalar or per-row (B,) vector; with `spion` the
+    attention families decode sparsely over the pattern-listed cache blocks
+    (tables dict or SparseAttentionExec, as in make_train_step)."""
     bundle = build(cfg)
+    static_block = block or cfg.spion.block_size
+    static_halo = None if halo is None else (int(halo[0]), int(halo[1]))
 
-    def serve_step(params, cache, tokens, pos):
-        return bundle.decode_step(params, cache, tokens, pos)
-    return serve_step
+    def serve_step(params, cache, tokens, pos, tables=None):
+        ex = _coerce_step_tables(tables, block=static_block,
+                                 halo=static_halo, phase="decode")
+        return bundle.decode_step(params, cache, tokens, pos, spion=ex)
+
+    if spion:
+        return serve_step
+    return functools.partial(serve_step, tables=None)
 
 
 # ---------------------------------------------------------------------------

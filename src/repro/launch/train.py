@@ -67,13 +67,14 @@ class Trainer:
 
         self._dense_step = jax.jit(make_train_step(
             cfg, spion=False, lr=lr, total_steps=total_steps), donate_argnums=(0, 1))
-        # the sparse step is (re)built lazily: the SparsityPlan's static halo
-        # extents (seq-axis sharding, DESIGN.md §10) only exist after the
-        # phase transition / a sparse-phase resume
-        self._lr, self._total_steps, self._sparse_kernel = (
-            lr, total_steps, sparse_kernel)
-        self._sparse_step = None
-        self._sparse_halo = ()           # sentinel != any real halo/None
+        # one jitted sparse step for the whole run: the step receives a
+        # SparseAttentionExec whose static block/halo ride the pytree
+        # aux_data, so a NEW plan (different halo after a phase transition
+        # or a sparse-phase resume) retraces automatically — no caller-side
+        # halo tracking or lazy step rebuilds (DESIGN.md §11)
+        self._sparse_step = jax.jit(make_train_step(
+            cfg, spion=True, lr=lr, total_steps=total_steps,
+            sparse_kernel=sparse_kernel), donate_argnums=(0, 1))
         self._capture = jax.jit(
             lambda p, b, f, blk: self.bundle.forward(
                 p, b, capture={"filt": f, "block": blk})[1]["captured"],
@@ -118,25 +119,11 @@ class Trainer:
 
     # -- steps ----------------------------------------------------------------
 
-    def _sparse_step_fn(self):
-        """The jitted sparse step for the CURRENT plan's halo extents."""
-        stats = self.spion_state.plan_stats or {}
-        halo = stats.get("halo")
-        halo = None if halo is None else tuple(int(h) for h in halo)
-        if self._sparse_step is None or halo != self._sparse_halo:
-            self._sparse_step = jax.jit(make_train_step(
-                self.cfg, spion=True, lr=self._lr,
-                total_steps=self._total_steps,
-                sparse_kernel=self._sparse_kernel, halo=halo),
-                donate_argnums=(0, 1), static_argnames=())
-            self._sparse_halo = halo
-        return self._sparse_step
-
     def _one_step(self, batch):
-        tables = self.spion_ctl.spion_kwargs(self.spion_state)
-        if tables is not None:
-            self.params, self.opt, metrics = self._sparse_step_fn()(
-                self.params, self.opt, batch, jnp.int32(self.step), tables)
+        ex = self.spion_ctl.attention_exec(self.spion_state)
+        if ex is not None:
+            self.params, self.opt, metrics = self._sparse_step(
+                self.params, self.opt, batch, jnp.int32(self.step), ex)
         else:
             self.params, self.opt, metrics = self._dense_step(
                 self.params, self.opt, batch, jnp.int32(self.step))

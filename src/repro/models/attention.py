@@ -1,10 +1,13 @@
-"""Attention: dense GQA (train/prefill), KV-cache decode, the SPION
-pattern-capture path that streams pooled diagonal-conv scores without ever
-materialising the L x L attention matrix (DESIGN.md §2), and the sparse-phase
-dispatch (`spion_sparse_attention`) that routes the BCSR tables either to the
-pure-jnp gather path or the fused differentiable Pallas kernel — mesh-aware:
-under a multi-device mesh the fused path runs through the shard_map wrapper
-(DESIGN.md §9).
+"""Attention: dense GQA (train/prefill), KV-cache decode (scalar or
+PER-ROW positions — the continuous-batching engine decodes every cache slot
+at its own offset), and the SPION pattern-capture path that streams pooled
+diagonal-conv scores without ever materialising the L x L attention matrix
+(DESIGN.md §2).
+
+Sparse-phase execution is owned by core.attention_exec.SparseAttentionExec
+(kernel resolution, plan tables, static block/halo — DESIGN.md §11);
+`spion_sparse_attention` / `resolve_sparse_kernel` here are thin per-layer
+wrappers kept for kernel tests and external callers.
 """
 from __future__ import annotations
 
@@ -14,8 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse_attention import BCSR, bcsr_attention
-from repro.distributed.sharding import constrain, current_mesh
+from repro.distributed.sharding import constrain
 from repro.models.layers import _he, linear, rope
 
 
@@ -131,36 +133,13 @@ def resolve_sparse_kernel(cfg, batch: int, kv_heads: int, *, nrb=None,
                           halo=None) -> str:
     """What `cfg.spion.kernel` dispatches to at trace time ("fused"/"jnp").
 
-    Mesh-aware: under an active multi-device mesh (distributed.sharding.
-    current_mesh()) "auto" picks the shard_map-wrapped fused kernel whenever
-    at least one kernel dim shards — batch over the data axes, KV heads
-    over 'model' (kernel_shard_axes), or Q row-blocks over 'seq' when the
-    pattern halo fits (`nrb` row-blocks + the plan's static `halo` extents,
-    kernel_seq_axis) — so sparse training keeps the Pallas kernel and its
-    sparse backward on pods instead of reverting to jnp gathers. This mesh
-    branch is deliberately NOT gated on the TPU backend: CI's
-    virtual-device meshes and the dry-run must exercise the exact
-    production dispatch (shard_map + kernel), accepting the Pallas
-    interpreter's speed off-TPU — a real multi-host CPU/GPU deployment that
-    wants wall-clock should force kernel="jnp". When nothing divides, or
-    with no mesh on a non-TPU backend, "auto" falls back to the jnp BCSR
-    path (the GSPMD-compatible gather stand-in). Exposed separately so
-    dry-runs and tests can record the resolution without tracing a step."""
-    impl = getattr(cfg.spion, "kernel", "auto")
-    if impl != "auto":
-        return impl
-    mesh = current_mesh()
-    if mesh is not None and mesh.size > 1:
-        from repro.distributed.sharding import (kernel_seq_axis,
-                                                kernel_shard_axes)
-        baxes, kv_ax = kernel_shard_axes(mesh, batch, kv_heads)
-        seq_ax, _ = kernel_seq_axis(mesh, nrb, halo)
-        return "fused" if (baxes or kv_ax or seq_ax) else "jnp"
-    # meshless: the fused kernel compiles through Mosaic only on TPU; with
-    # multiple devices but no mesh there is nothing to shard over, so stay
-    # on the jnp path (jit places it on the default device either way)
-    on_tpu = jax.default_backend() == "tpu" and jax.device_count() == 1
-    return "fused" if on_tpu else "jnp"
+    Thin wrapper over core.attention_exec.resolve_kernel — the
+    SparseAttentionExec owns the resolution (mesh-aware "auto": shard_map
+    fused under multi-device meshes, jnp BCSR otherwise; see its docstring).
+    Kept here because dry-runs and tests record the resolution without
+    tracing a step."""
+    from repro.core.attention_exec import resolve_kernel
+    return resolve_kernel(cfg, batch, kv_heads, nrb=nrb, halo=halo)
 
 
 def spion_sparse_attention(cfg, q, k, v, spion_layer):
@@ -169,34 +148,17 @@ def spion_sparse_attention(cfg, q, k, v, spion_layer):
     spion_layer: {'col_idx': (nrb, K), 'nvalid': (nrb,), 'block': int} plus,
     when a host-built SparsityPlan is threaded through the step, the layer's
     precomputed transposed tables {'row_idx': (ncb, KT*), 'nvalid_t': (ncb,)}
-    — the fused kernel's dK/dV backward grid then shrinks to the true
-    pattern width KT* and the per-step under-jit bcsr_transpose disappears —
-    and optionally the STATIC 'halo' (left, right) column-extent pair (plan
-    stats), which unlocks 'seq'-axis sharding under a sequence-parallel
-    mesh (DESIGN.md §10).
-    Dispatch follows cfg.spion.kernel (see `resolve_sparse_kernel`): "auto"
-    is mesh-aware — the fused differentiable Pallas kernel on single-device
-    TPU AND, via the shard_map wrapper, under multi-device meshes whose
-    axes divide the kernel dims; the pure-jnp BCSR path otherwise.
-    "fused"/"jnp" force one (forcing "fused" under a mesh still routes
-    through the shard_map wrapper; a bare kernel call there fails loudly —
-    kernels/block_sparse_attn.py). Both paths train — the fused kernel's
-    backward is sparse too, which is what makes the sparse phase's speedup
-    honest for training, not just inference.
+    and optionally the STATIC 'halo' (left, right) column-extent pair.
+
+    Legacy per-layer entry point: builds a single-layer SparseAttentionExec
+    (core/attention_exec.py — the single owner of kernel resolution and the
+    static block/halo metadata) and runs its `attend`. Model families thread
+    the exec itself; this wrapper exists for kernel tests and external
+    callers that hold one layer's tables in hand.
     """
-    bcsr = BCSR(spion_layer["col_idx"], spion_layer["nvalid"],
-                spion_layer["block"], q.shape[1])
-    halo = spion_layer.get("halo")
-    impl = resolve_sparse_kernel(cfg, q.shape[0], k.shape[2],
-                                 nrb=q.shape[1] // spion_layer["block"],
-                                 halo=halo)
-    if impl == "fused":
-        from repro.kernels.ops import spion_attention_kernel
-        return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True,
-                                      row_idx=spion_layer.get("row_idx"),
-                                      nvalid_t=spion_layer.get("nvalid_t"),
-                                      halo=halo)
-    return bcsr_attention(cfg, q, k, v, bcsr)
+    from repro.core.attention_exec import SparseAttentionExec
+    ex = SparseAttentionExec.coerce(spion_layer)
+    return ex.attend(cfg, q, k, v, spion_layer)
 
 
 def attn_out(cfg, p, ctx):
@@ -232,11 +194,21 @@ def dense_mha(cfg, p, x, positions, kv_positions=None, xkv=None):
 # KV-cache decode
 # ---------------------------------------------------------------------------
 
+def decode_positions(pos, batch: int):
+    """Normalise a decode position argument — a scalar (every batch row at
+    the same position, the legacy synchronous form) or a (B,) vector (the
+    serving engine's per-slot positions) — to a (B,) int32 vector."""
+    p = jnp.atleast_1d(jnp.asarray(pos))
+    return jnp.broadcast_to(p, (batch,)).astype(jnp.int32)
+
+
 def decode_attention(cfg, q, k_cache, v_cache, pos, kpos=None):
     """One-token decode: q (B,1,H,hd); caches (B,S_cache,KV,hd); pos scalar
-    (current token index). `kpos` gives the absolute position stored in each
-    cache slot (defaults to arange — plain append cache). Sliding-window archs
-    use a ring buffer: slot s holds token pos - ((pos - s) % W)."""
+    or (B,) per-row current token indices (continuous batching decodes every
+    slot at its own offset). `kpos` gives the absolute position stored in
+    each cache slot, (S,) or (B,S) (defaults to arange — plain append
+    cache). Sliding-window archs use a ring buffer: slot s holds token
+    pos - ((pos - s) % W)."""
     B, _, H, hd = q.shape
     KV = k_cache.shape[2]
     G = H // KV
@@ -245,37 +217,56 @@ def decode_attention(cfg, q, k_cache, v_cache, pos, kpos=None):
     # consume the hd-sharded cache (partial scores + psum) removed the
     # involuntary-remat copies but cost 6x flops and 10x collective bytes —
     # the per-layer cache reshard copy is the cheaper evil. See EXPERIMENTS.md.
+    posb = decode_positions(pos, B)
     qg = q.reshape(B, KV, G, hd)
     k_cache = k_cache.astype(q.dtype)  # fp8 caches upcast for the MXU einsum
     v_cache = v_cache.astype(q.dtype)
     scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) / np.sqrt(hd)
     if kpos is None:
         kpos = jnp.arange(S)
-    ok = (kpos >= 0) & (kpos <= pos)
+    kpos = jnp.broadcast_to(kpos, (B, S))
+    ok = (kpos >= 0) & (kpos <= posb[:, None])
     if cfg.sliding_window:
-        ok &= kpos > pos - cfg.sliding_window
-    scores = jnp.where(ok[None, None, None, :], scores, -jnp.inf)
+        ok &= kpos > posb[:, None] - cfg.sliding_window
+    scores = jnp.where(ok[:, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
     return out.reshape(B, 1, H, hd)
 
 
 def cache_slot(cfg, pos, cache_len):
-    """Ring-buffer slot for the token at absolute position `pos`."""
+    """Ring-buffer slot for the token at absolute position `pos` (scalar or
+    per-row vector)."""
     return pos % cache_len
 
 
 def ring_kpos(pos, cache_len):
     """Absolute positions held by each ring-buffer slot at decode step `pos`
-    (after inserting token `pos`): slot s -> pos - ((pos - s) mod cache_len)."""
+    (after inserting token `pos`): slot s -> pos - ((pos - s) mod cache_len).
+    pos scalar -> (cache_len,); pos (B,) -> (B, cache_len)."""
     s = jnp.arange(cache_len)
-    return pos - jnp.mod(pos - s, cache_len)
+    if jnp.ndim(pos) == 0:
+        return pos - jnp.mod(pos - s, cache_len)
+    p = jnp.asarray(pos)[:, None]
+    return p - jnp.mod(p - s, cache_len)
 
 
 def update_cache(k_cache, v_cache, k_new, v_new, slot):
-    """Insert one token's k/v at index `slot`. Caches (B,S,KV,hd); new (B,1,KV,hd)."""
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    """Insert one token's k/v at index `slot`. Caches (B,S,KV,hd); new
+    (B,1,KV,hd). `slot` scalar writes every row at the same index (the
+    legacy synchronous decode); a (B,) vector writes each row at its own
+    slot — the continuous-batching engine's per-slot positions, and the
+    reason one slot's decode can never touch another slot's cache row."""
+    slot = jnp.asarray(slot)
+    if slot.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+        return k_cache, v_cache
+    rows = jnp.arange(k_cache.shape[0])
+    k_cache = k_cache.at[rows, slot].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, slot].set(v_new[:, 0].astype(v_cache.dtype))
     return k_cache, v_cache
 
 

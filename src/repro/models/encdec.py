@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_attention import PLAN_TABLE_KEYS
+from repro.core.attention_exec import SparseAttentionExec
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -92,8 +92,11 @@ def encode(params, cfg, frames):
 
 
 def forward(params, cfg, batch, *, spion=None, capture=None):
-    """batch: frames (B,S_enc,d), tokens (B,S_dec)."""
+    """batch: frames (B,S_enc,d), tokens (B,S_dec). `spion` is a
+    SparseAttentionExec or the legacy tables payload (decoder self-attention
+    only; cross-attention stays dense)."""
     dtype = jnp.dtype(cfg.dtype)
+    ex = SparseAttentionExec.coerce(spion)
     enc = encode(params, cfg, batch["frames"])
     enc = constrain(enc, "batch", None, None)
     tokens = batch["tokens"]
@@ -115,9 +118,7 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
                 cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                               capture["filt"], capture["block"])
             if sp is not None:
-                ctx = A.spion_sparse_attention(
-                    cfg, q, k, v, {**sp, "block": spion["block"],
-                                   "halo": spion.get("halo")})
+                ctx = ex.attend(cfg, q, k, v, sp)
             else:
                 ctx = A.dense_attention(cfg, q, k, v, positions, positions)
             h = h + A.attn_out(cfg, lp["attn"], ctx)
@@ -135,8 +136,7 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
         h, cap = run(h, lp, sp)
         return h, cap
 
-    sp_stacked = None if spion is None else {
-        k: spion[k] for k in PLAN_TABLE_KEYS if k in spion}
+    sp_stacked = None if ex is None else ex.scan_tables()
     h, caps = jax.lax.scan(body, h, (params["dec_layers"], sp_stacked),
                            unroll=cfg.scan_unroll)
     h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
@@ -175,20 +175,34 @@ def precompute_cross(params, cfg, frames):
     return ck, cv
 
 
-def decode_step(params, cfg, cache, tokens, pos):
+def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
+    """pos scalar or (B,) per-row positions; `spion` (exec or payload)
+    switches decoder self-attention to the pattern-bounded sparse decode —
+    cross-attention reads the whole precomputed encoder K/V either way."""
     dtype = jnp.dtype(cfg.dtype)
+    ex = SparseAttentionExec.coerce(spion, phase="decode")
+    B = tokens.shape[0]
+    posb = A.decode_positions(pos, B)
     h = Lyr.embed(params["tok_embed"], tokens, dtype)
-    h = h + jax.lax.dynamic_slice_in_dim(params["pos_embed"]["w"], pos, 1, 0).astype(dtype)[None]
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    h = h + jnp.take(params["pos_embed"]["w"], posb, axis=0).astype(dtype)[:, None]
+    positions = posb[:, None]
     ccfg = _enc_cfg(cfg)
     enc_len = cache["ck"].shape[3 - 1]
+    dec = None if ex is None else ex.scan_tables()
 
     def body(h, xs):
-        lp, kc, vc, ck, cv = xs
+        if ex is None:
+            lp, kc, vc, ck, cv = xs
+            dl = None
+        else:
+            lp, kc, vc, ck, cv, dl = xs
         x = Lyr.layernorm(lp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
-        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions.astype(jnp.int32))
-        kc, vc = A.update_cache(kc, vc, k_new, v_new, pos)
-        ctx = A.decode_attention(cfg, q, kc, vc, pos)
+        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions)
+        kc, vc = A.update_cache(kc, vc, k_new, v_new, posb)
+        if dl is not None:
+            ctx = ex.decode(cfg, q, kc, vc, posb, dl)
+        else:
+            ctx = A.decode_attention(cfg, q, kc, vc, posb)
         h = h + A.attn_out(cfg, lp["attn"], ctx)
         x = Lyr.layernorm(lp["cross_norm"], h.astype(jnp.float32)).astype(h.dtype)
         qc, _, _ = A.qkv(ccfg, lp["cross"], x, positions)
@@ -198,8 +212,10 @@ def decode_step(params, cfg, cache, tokens, pos):
         h = h + Lyr.mlp(cfg, lp["mlp"], x)
         return h, (kc, vc)
 
-    h, (ks, vs) = jax.lax.scan(body, h, (params["dec_layers"], cache["k"], cache["v"],
-                                         cache["ck"], cache["cv"]), unroll=cfg.scan_unroll)
+    xs = (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    if ex is not None:
+        xs = xs + (dec,)
+    h, (ks, vs) = jax.lax.scan(body, h, xs, unroll=cfg.scan_unroll)
     h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
     logits = Lyr.unembed(params["tok_embed"], h)[:, 0]
     return logits, {**cache, "k": ks, "v": vs}

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_attention import PLAN_TABLE_KEYS
+from repro.core.attention_exec import SparseAttentionExec
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -46,20 +46,17 @@ def init(key, cfg):
     }
 
 
-def _shared_attn_block(cfg, sp, h, positions, bcsr_tables, app_idx, capture):
+def _shared_attn_block(cfg, sp, h, positions, ex, app_idx, capture):
+    """`ex` is the SparseAttentionExec (None -> dense); the shared block's
+    tables are indexed by the traced application index, not scanned."""
     x = Lyr.rmsnorm(sp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
     q, k, v = A.qkv(cfg, sp["attn"], x, positions)
     cap = jnp.zeros((), jnp.float32)
     if capture is not None:
         cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                       capture["filt"], capture["block"])
-    if bcsr_tables is not None:
-        layer = {"block": bcsr_tables["block"],
-                 "halo": bcsr_tables.get("halo")}
-        for name in PLAN_TABLE_KEYS:
-            if name in bcsr_tables:
-                layer[name] = jnp.take(bcsr_tables[name], app_idx, axis=0)
-        ctx = A.spion_sparse_attention(cfg, q, k, v, layer)
+    if ex is not None:
+        ctx = ex.attend_app(cfg, q, k, v, app_idx)
     else:
         ctx = A.dense_attention(cfg, q, k, v, positions, positions)
     h = h + A.attn_out(cfg, sp["attn"], ctx)
@@ -69,6 +66,7 @@ def _shared_attn_block(cfg, sp, h, positions, bcsr_tables, app_idx, capture):
 
 def forward(params, cfg, batch, *, spion=None, capture=None):
     dtype = jnp.dtype(cfg.dtype)
+    ex = SparseAttentionExec.coerce(spion)
     h = Lyr.embed(params["tok_embed"], batch["tokens"], dtype)
     h = constrain(h, "batch", None, None)
     S = h.shape[1]
@@ -91,7 +89,7 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
         is_attn = (idx % every) == (every - 1)
 
         def with_attn(h):
-            return _shared_attn_block(cfg, shared, h, positions, spion, app, capture)
+            return _shared_attn_block(cfg, shared, h, positions, ex, app, capture)
 
         def without(h):
             if capture is not None:
@@ -127,12 +125,17 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     }
 
 
-def decode_step(params, cfg, cache, tokens, pos):
+def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
+    """pos scalar or (B,) per-row positions; `spion` (exec or payload)
+    makes each shared-attention application decode over only its pattern
+    row's cache blocks (per-app tables, indexed like the forward)."""
     dtype = jnp.dtype(cfg.dtype)
+    ex = SparseAttentionExec.coerce(spion, phase="decode")
     h = Lyr.embed(params["tok_embed"], tokens, dtype)
     every = cfg.hybrid_attn_every
     shared = params["shared_attn"]
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    posb = A.decode_positions(pos, tokens.shape[0])
+    positions = posb[:, None]
     napps = n_attn_apps(cfg)
 
     # mamba layers scanned; attention caches updated by app index
@@ -149,9 +152,12 @@ def decode_step(params, cfg, cache, tokens, pos):
             kc = jnp.take(kall, app, axis=0)
             vc = jnp.take(vall, app, axis=0)
             x = Lyr.rmsnorm(shared["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
-            q, k_new, v_new = A.qkv(cfg, shared["attn"], x, positions.astype(jnp.int32))
-            kc, vc = A.update_cache(kc, vc, k_new, v_new, pos)
-            ctx = A.decode_attention(cfg, q, kc, vc, pos)
+            q, k_new, v_new = A.qkv(cfg, shared["attn"], x, positions)
+            kc, vc = A.update_cache(kc, vc, k_new, v_new, posb)
+            if ex is not None:
+                ctx = ex.decode_app(cfg, q, kc, vc, posb, app)
+            else:
+                ctx = A.decode_attention(cfg, q, kc, vc, posb)
             h = h + A.attn_out(cfg, shared["attn"], ctx)
             x = Lyr.rmsnorm(shared["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
             h = h + Lyr.mlp(cfg, shared["mlp"], x)

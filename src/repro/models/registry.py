@@ -5,7 +5,14 @@ build(cfg) -> ModelBundle with:
     forward(params, batch, *, spion=None, capture=None) -> (logits, aux)
     loss(params, batch, *, spion=None, capture=None) -> (loss, aux)
     init_cache(batch_size, max_len) -> cache
-    decode_step(params, cache, tokens, pos) -> (logits, cache)
+    decode_step(params, cache, tokens, pos, *, spion=None) -> (logits, cache)
+        pos: scalar or (B,) per-row positions; spion: a decode-phase
+        SparseAttentionExec (or legacy payload) for pattern-bounded sparse
+        decode on the attention families
+    prefill_kv(params, batch, *, spion=None) -> (logits, ks, vs) — the fused
+        serving prefill (full-sequence forward that also emits per-layer
+        RoPE'd K/V for cache insertion); None for families without a plain
+        KV cache (ssm/hybrid serve via stepwise prefill instead)
 input_specs(cfg, shape) -> ShapeDtypeStruct pytrees for the dry-run
 (train/prefill: kwargs of forward-batch; decode: (cache, tokens, pos)).
 """
@@ -31,6 +38,7 @@ class ModelBundle(NamedTuple):
     loss: Callable
     init_cache: Callable
     decode_step: Callable
+    prefill_kv: Optional[Callable] = None
 
 
 def _family_module(cfg: ModelConfig):
@@ -80,10 +88,16 @@ def build(cfg: ModelConfig) -> ModelBundle:
     def init_cache(batch_size, max_len, **kw):
         return mod.init_cache(cfg, batch_size, max_len, **kw)
 
-    def decode_step(params, cache, tokens, pos):
-        return mod.decode_step(params, cfg, cache, tokens, pos)
+    def decode_step(params, cache, tokens, pos, *, spion=None):
+        return mod.decode_step(params, cfg, cache, tokens, pos, spion=spion)
 
-    return ModelBundle(cfg, init, forward, loss, init_cache, decode_step)
+    prefill_kv = None
+    if hasattr(mod, "prefill_step"):
+        def prefill_kv(params, batch, *, spion=None):
+            return mod.prefill_step(params, cfg, batch, spion=spion)
+
+    return ModelBundle(cfg, init, forward, loss, init_cache, decode_step,
+                       prefill_kv)
 
 
 # ---------------------------------------------------------------------------

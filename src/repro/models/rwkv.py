@@ -215,7 +215,12 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     }
 
 
-def decode_step(params, cfg, cache, tokens, pos):
+def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
+    # `pos` is accepted (scalar or per-row vector) for signature uniformity
+    # but unused: the recurrent state is position-free, which is exactly the
+    # O(1)-per-token long-context property.
+    if spion is not None:
+        raise ValueError("rwkv decode has no attention cache to sparsify")
     dtype = jnp.dtype(cfg.dtype)
     h = Lyr.embed(params["tok_embed"], tokens, dtype)
     h = Lyr.layernorm(params["in_norm"], h.astype(jnp.float32)).astype(dtype)

@@ -13,7 +13,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_attention import PLAN_TABLE_KEYS
+from repro.core.attention_exec import SparseAttentionExec
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -57,24 +57,31 @@ def init(key, cfg):
     return params
 
 
-def _self_attention(cfg, p, h, positions, spion_layer, capture):
-    """One layer's attention; returns (out, captured_or_zeros)."""
+def _self_attention(cfg, p, h, positions, ex, sp, capture, collect_kv=False):
+    """One layer's attention; returns (out, captured_or_zeros, kv_or_None).
+
+    `ex` is the phase's SparseAttentionExec (None in the dense phase); `sp`
+    this layer's slice of its scanned tables. collect_kv=True additionally
+    returns the RoPE'd (k, v) — the fused serving prefill inserts them
+    straight into decode-cache slots."""
     x = Lyr.norm(cfg, p["attn_norm"], h)
     q, k, v = A.qkv(cfg, p["attn"], x, positions)
     cap = jnp.zeros((), jnp.float32)
     if capture is not None:
         cap = A.capture_pooled_scores(cfg, q, k, positions, positions,
                                       capture["filt"], capture["block"])  # (pooled, frob)
-    if spion_layer is not None:
-        ctx = A.spion_sparse_attention(cfg, q, k, v, spion_layer)
+    if sp is not None:
+        ctx = ex.attend(cfg, q, k, v, sp)
     else:
         pos1d = positions
         ctx = A.dense_attention(cfg, q, k, v, pos1d, pos1d)
-    return A.attn_out(cfg, p["attn"], ctx), cap
+    kv = (k, v) if collect_kv else None
+    return A.attn_out(cfg, p["attn"], ctx), cap, kv
 
 
-def _block(cfg, p, h, positions, spion_layer, capture):
-    attn_y, cap = _self_attention(cfg, p, h, positions, spion_layer, capture)
+def _block(cfg, p, h, positions, ex, sp, capture, collect_kv=False):
+    attn_y, cap, kv = _self_attention(cfg, p, h, positions, ex, sp, capture,
+                                      collect_kv)
     h = h + attn_y
     x = Lyr.norm(cfg, p["mlp_norm"], h)
     if cfg.moe is not None:
@@ -83,6 +90,8 @@ def _block(cfg, p, h, positions, spion_layer, capture):
     else:
         y = Lyr.mlp(cfg, p["mlp"], x)
         aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    if collect_kv:
+        return h + y, cap, aux, kv
     return h + y, cap, aux
 
 
@@ -98,17 +107,21 @@ def _embed_inputs(cfg, params, batch, dtype):
     return h, positions
 
 
-def forward(params, cfg, batch, *, spion=None, capture=None):
+def forward(params, cfg, batch, *, spion=None, capture=None,
+            collect_kv=False):
     """batch: {'tokens': (B,S') [, 'patch_embeds': (B,P,d)]} -> logits (B,S,V).
 
-    spion: None | {'col_idx': (Ly,nrb,K), 'nvalid': (Ly,nrb), 'block': int}
-           optionally + SparsityPlan transposed tables
-           {'row_idx': (Ly,ncb,KT*), 'nvalid_t': (Ly,ncb)} (sparse backward
-           grid sized to the true pattern width)
+    spion: None | SparseAttentionExec | legacy tables dict (coerced — see
+           core/attention_exec.py; the exec owns the resolved kernel, the
+           plan tables and the static block/halo metadata).
     capture: None | {'filt': (F,), 'block': int} -> also returns
              (Ly, S/B, S/B) pooled conv scores for pattern generation.
+    collect_kv: also return the per-layer RoPE'd K/V, stacked (L,B,S,KV,hd)
+             — the fused serving prefill writes them into cache slots.
+             Return becomes (logits, aux, (ks, vs)).
     """
     dtype = _dtype(cfg)
+    ex = SparseAttentionExec.coerce(spion)
     h, positions = _embed_inputs(cfg, params, batch, dtype)
     h = constrain(h, "batch", "model" if cfg.act_shard == "seq" else None,
                   "model" if cfg.act_shard == "d" else None)
@@ -117,22 +130,19 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
         lp, sp = xs
 
         def run(h, lp, sp):
-            return _block(cfg, lp, h, positions,
-                          None if sp is None else
-                          {**sp, "block": spion["block"],
-                           "halo": spion.get("halo")},
-                          capture)
+            return _block(cfg, lp, h, positions, ex, sp, capture, collect_kv)
         if cfg.remat:
             run = jax.checkpoint(run, prevent_cse=False)
+        if collect_kv:
+            h, cap, aux, kv = run(h, lp, sp)
+            return h, (cap, aux, kv)
         h, cap, aux = run(h, lp, sp)
         return h, (cap, aux)
 
-    if spion is not None:
-        sp_stacked = {k: spion[k] for k in PLAN_TABLE_KEYS if k in spion}
-    else:
-        sp_stacked = None
-    h, (caps, auxs) = jax.lax.scan(body, h, (params["layers"], sp_stacked),
-                                   unroll=cfg.scan_unroll)
+    sp_stacked = None if ex is None else ex.scan_tables()
+    h, ys = jax.lax.scan(body, h, (params["layers"], sp_stacked),
+                         unroll=cfg.scan_unroll)
+    caps, auxs = ys[0], ys[1]
 
     h = Lyr.norm(cfg, params["final_norm"], h)
     head = params["lm_head" if "lm_head" in params else "tok_embed"]
@@ -141,6 +151,8 @@ def forward(params, cfg, batch, *, spion=None, capture=None):
     aux = {k: jnp.mean(v) for k, v in auxs.items()}
     if capture is not None:
         aux["captured"] = caps
+    if collect_kv:
+        return logits, aux, ys[2]
     return logits, aux
 
 
@@ -155,25 +167,45 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def decode_step(params, cfg, cache, tokens, pos):
-    """tokens (B,1) at absolute position `pos` (int32 scalar).
-    Returns (logits (B,V), new cache)."""
+def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
+    """tokens (B,1) at absolute position `pos` — an int32 scalar (every row
+    at the same position, the legacy synchronous form) or a (B,) vector of
+    per-row positions (the continuous-batching engine: each cache slot
+    decodes at its own offset). Returns (logits (B,V), new cache).
+
+    spion: None | SparseAttentionExec (phase "decode") | legacy tables
+    payload — when present, attention gathers only the cache blocks the
+    query position's pattern row lists (sparse decode, DESIGN.md §11)
+    instead of reading the whole cache; composes with the sliding-window
+    ring buffer."""
     dtype = _dtype(cfg)
+    ex = SparseAttentionExec.coerce(spion, phase="decode")
+    B = tokens.shape[0]
+    posb = A.decode_positions(pos, B)
     h = Lyr.embed(params["tok_embed"], tokens, dtype)
     if not cfg.rope_theta and "pos_embed" in params:
-        h = h + jax.lax.dynamic_slice_in_dim(params["pos_embed"]["w"], pos, 1, 0).astype(dtype)[None]
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+        h = h + jnp.take(params["pos_embed"]["w"], posb, axis=0).astype(dtype)[:, None]
+    positions = posb[:, None]
     h = constrain(h, "batch", None, None)
+    dec = None if ex is None else ex.scan_tables()
 
     def body(h, xs):
-        lp, kc, vc = xs
+        if ex is None:
+            lp, kc, vc = xs
+            dl = None
+        else:
+            lp, kc, vc, dl = xs
         x = Lyr.norm(cfg, lp["attn_norm"], h)
-        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions.astype(jnp.int32))
+        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions)
         cache_len = kc.shape[1]
-        slot = A.cache_slot(cfg, pos, cache_len) if cfg.sliding_window else pos
-        kpos = A.ring_kpos(pos, cache_len) if cfg.sliding_window else None
+        ring = bool(cfg.sliding_window)
+        slot = A.cache_slot(cfg, posb, cache_len) if ring else posb
         kc, vc = A.update_cache(kc, vc, k_new, v_new, slot)
-        ctx = A.decode_attention(cfg, q, kc, vc, pos, kpos=kpos)
+        if dl is not None:
+            ctx = ex.decode(cfg, q, kc, vc, posb, dl, ring=ring)
+        else:
+            kpos = A.ring_kpos(posb, cache_len) if ring else None
+            ctx = A.decode_attention(cfg, q, kc, vc, posb, kpos=kpos)
         h = h + A.attn_out(cfg, lp["attn"], ctx)
         x = Lyr.norm(cfg, lp["mlp_norm"], h)
         if cfg.moe is not None:
@@ -182,9 +214,25 @@ def decode_step(params, cfg, cache, tokens, pos):
             y = Lyr.mlp(cfg, lp["mlp"], x)
         return h + y, (kc, vc)
 
-    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]),
-                               unroll=cfg.scan_unroll)
+    xs = (params["layers"], cache["k"], cache["v"])
+    if ex is not None:
+        xs = xs + (dec,)
+    h, (ks, vs) = jax.lax.scan(body, h, xs, unroll=cfg.scan_unroll)
     h = Lyr.norm(cfg, params["final_norm"], h)
     head = params["lm_head" if "lm_head" in params else "tok_embed"]
     logits = Lyr.unembed(head, h)[:, 0]
     return constrain(logits, "batch", "model"), {"k": ks, "v": vs}
+
+
+def prefill_step(params, cfg, batch, *, spion=None):
+    """Fused serving prefill: one full-sequence forward over the prompt that
+    also returns every layer's RoPE'd K/V for direct insertion into decode
+    cache slots — (logits (B,S,V), ks (L,B,S,KV,hd), vs (L,B,S,KV,hd)).
+
+    Causality makes padding free: logits and K/V at positions < P are
+    unaffected by whatever sits after the prompt, so the serving engine can
+    pad prompts to a bucketed length (bounding retraces) and insert only
+    the real positions."""
+    logits, _aux, (ks, vs) = forward(params, cfg, batch, spion=spion,
+                                     collect_kv=True)
+    return logits, ks, vs
