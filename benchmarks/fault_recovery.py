@@ -1,0 +1,111 @@
+"""Fault-recovery bench: training throughput before a kill vs after a
+resume, on a REAL 2-process `jax.distributed` CPU job.
+
+Three legs over one checkpoint directory, driving tests/mp_train_worker.py
+(the same harness the tier1-multiprocess suite uses):
+
+  1. uninterrupted 2-process run through the dense->sparse transition
+     (commits checkpoints along the way)           -> `before_kill` row
+  2. restart that is SIGKILLed mid-sparse-phase (the orphaned survivor is
+     reaped by the harness, as a real job supervisor would)
+  3. restart after the kill: restores the last committed step, digest-checks
+     the restored plan, trains on                  -> `after_resume` row
+
+Values are us/step over each completed leg (jit compile and — for leg 3 —
+checkpoint restore included: this row is recovery health, not kernel perf).
+The derived field records steps/s and where leg 3 resumed from. CI's
+bench-smoke job asserts both rows exist and error-free like any other row.
+"""
+from __future__ import annotations
+
+import os
+import re
+import signal
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_WORKER = os.path.join("tests", "mp_train_worker.py")
+
+
+def _free_port():
+    import socket
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def _spawn(nproc, port, ckpt_dir, target, *, ckpt_every=3, chaos=None,
+           chaos_pid=None):
+    procs = []
+    for pid in range(nproc):
+        env = {"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+               "PATH": os.environ.get("PATH", "/usr/bin:/bin")}
+        if chaos and pid == chaos_pid:
+            env.update(chaos)
+        procs.append(subprocess.Popen(
+            [sys.executable, _WORKER, "--pid", str(pid),
+             "--nproc", str(nproc), "--port", str(port),
+             "--ckpt-dir", ckpt_dir, "--target-step", str(target),
+             "--ckpt-every", str(ckpt_every)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env, cwd=_ROOT))
+    return procs
+
+
+def _drain(procs, timeout=900):
+    outs = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=timeout)
+            outs.append((p.returncode, out, err))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    return outs
+
+
+def _timing(stdout):
+    m = re.search(r"WORKER_TIMING steps=(\d+) seconds=([\d.]+)", stdout)
+    if not m:
+        raise RuntimeError(f"no WORKER_TIMING in worker output:\n{stdout}")
+    return int(m.group(1)), float(m.group(2))
+
+
+def rows(out, smoke=False):
+    import tempfile
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # leg 1: uninterrupted to step 8 (dense 0-7, transition at 8 via
+        # steps_per_epoch=4 + max_dense_epochs=2); commits 3, 6, 8
+        outs = _drain(_spawn(2, _free_port(), ckpt_dir, 8))
+        if any(rc != 0 for rc, _, _ in outs):
+            raise RuntimeError(f"before-kill leg failed:\n{outs[0][2][-2000:]}")
+        steps, secs = _timing(outs[0][1])
+        out("faultrecovery.before_kill", secs / steps * 1e6,
+            f"{steps / secs:.2f} steps/s (2 procs; compile incl)")
+
+        # leg 2: resume and SIGKILL process 1 mid-sparse-phase at step 12
+        procs = _spawn(2, _free_port(), ckpt_dir, 16,
+                       chaos={"SPION_CHAOS_KILL_STEP": "12",
+                              "SPION_CHAOS_KILL_PROC": "1",
+                              "SPION_CHAOS_SIGNAL": "KILL"}, chaos_pid=1)
+        procs[1].wait(timeout=900)
+        if procs[1].returncode != -signal.SIGKILL:
+            raise RuntimeError(
+                f"chaos victim exited {procs[1].returncode}, expected SIGKILL")
+        procs[0].kill()  # survivor is wedged in a dead collective
+        _drain(procs, timeout=60)
+
+        # leg 3: restart restores the last committed step and trains on
+        outs = _drain(_spawn(2, _free_port(), ckpt_dir, 16))
+        if any(rc != 0 for rc, _, _ in outs):
+            raise RuntimeError(f"resume leg failed:\n{outs[0][2][-2000:]}")
+        if "phase=sparse" not in outs[0][1]:
+            raise RuntimeError("resume leg did not end in the sparse phase")
+        first = min(int(m.group(1)) for m in
+                    re.finditer(r"^LOSS,(\d+),", outs[0][1], re.M))
+        steps, secs = _timing(outs[0][1])
+        out("faultrecovery.after_resume", secs / steps * 1e6,
+            f"{steps / secs:.2f} steps/s (restore+compile incl; "
+            f"resumed@{first})")

@@ -22,6 +22,9 @@ perf history that CI uploads as an artifact.
                    per-slot-position decode tokens/s) and dense-vs-sparse
                    decode_step at S_cache in {1k, 4k} — the pattern-bounded
                    cache gather must beat dense at >= 4k
+  faultrecovery    steps/s before a mid-sparse-phase SIGKILL vs after the
+                   checkpoint-restore resume, on a real 2-process
+                   jax.distributed CPU job (recovery health, not kernel perf)
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
@@ -65,8 +68,10 @@ def _parse_args(argv):
 
 
 def _mods(smoke):
-    from benchmarks import (accuracy_proxy, memory_footprint, mha_breakdown,
-                            opcount, roofline, sparsity_ratio)
+    from benchmarks import (accuracy_proxy, fault_recovery, memory_footprint,
+                            mha_breakdown, opcount, roofline, sparsity_ratio)
+    faultrecovery = SimpleNamespace(
+        rows=functools.partial(fault_recovery.rows, smoke=smoke))
     train_step = SimpleNamespace(
         rows=functools.partial(mha_breakdown.train_step_rows, smoke=smoke))
     bwd = SimpleNamespace(
@@ -83,10 +88,11 @@ def _mods(smoke):
         return [("opcount", opcount), ("mha_breakdown", breakdown),
                 ("train_step", train_step), ("bwd", bwd),
                 ("sharded", sharded), ("seqshard", seqshard),
-                ("serve", serve)]
+                ("serve", serve), ("faultrecovery", faultrecovery)]
     return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
             ("train_step", train_step), ("bwd", bwd), ("sharded", sharded),
             ("seqshard", seqshard), ("serve", serve),
+            ("faultrecovery", faultrecovery),
             ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),
             ("accuracy_proxy", accuracy_proxy), ("roofline", roofline)]

@@ -1,4 +1,4 @@
-"""Checkpointing: atomic, mesh-agnostic, async-capable.
+"""Checkpointing: atomic, mesh-agnostic, async-capable, multi-process-aware.
 
 Format: one directory per step containing
   - arrays.npz       every pytree leaf, fully replicated (gathered) view
@@ -10,10 +10,21 @@ Format: one directory per step containing
   - DONE             commit marker (atomic rename makes the step visible)
 
 Mesh-agnostic restore: leaves are saved unsharded, so a checkpoint taken on
-256 chips restores onto 512 (elastic re-scale) — the caller re-applies its
-own shardings via device_put. Async save: serialisation happens on a
-background thread after jax.device_get (the step loop is blocked only for
-the host transfer).
+256 chips restores onto 512 (elastic re-scale) — pass `shardings` built for
+the *current* mesh and restore re-shards each leaf for it, however many
+processes the new mesh spans. Async save: serialisation happens on a
+background thread after the host gather (the step loop is blocked only for
+the device->host transfer); a failed background write is surfaced on the
+next save()/wait() instead of dying silently in the daemon thread.
+
+Multi-process protocol (process-0-writes / all-read, DESIGN.md §12): every
+process calls save()/wait()/restore() at the same step — the host gather is
+a device collective all processes join — but only process 0 serialises and
+commits. The cross-process *commit barrier* runs in wait() (main thread:
+collectives must never interleave with training-step collectives from a
+background thread), so after wait() returns, every process agrees the step
+is committed and readable — restore()/latest_step() wait() first and
+therefore never observe a half-written step or an in-flight async save.
 """
 from __future__ import annotations
 
@@ -21,11 +32,13 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import msgpack
 import numpy as np
+
+from repro.distributed import runtime
 
 
 def _flatten(tree):
@@ -34,12 +47,31 @@ def _flatten(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 multiprocess: Optional[bool] = None):
+        """`multiprocess=None` resolves lazily from jax.process_count() at
+        the first collective call, so constructing a manager never touches
+        the backend (dry-runs construct one before devices exist)."""
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        self._multiprocess = multiprocess
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._pending_commit = False
         os.makedirs(directory, exist_ok=True)
+
+    # -- multi-process roles ----------------------------------------------
+
+    @property
+    def multiprocess(self) -> bool:
+        if self._multiprocess is None:
+            self._multiprocess = jax.process_count() > 1
+        return self._multiprocess
+
+    @property
+    def is_writer(self) -> bool:
+        return not self.multiprocess or runtime.is_coordinator()
 
     # -- save ------------------------------------------------------------
 
@@ -48,23 +80,42 @@ class CheckpointManager:
         """Gather to host, then (a)synchronously serialise + commit.
         `extra_arrays` ({name: array}) are persisted binary alongside the
         pytree — phase state like the SPION SparsityPlan tables rides here
-        instead of being JSON-encoded into `extra`."""
-        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
-        if extra_arrays is not None:
-            extra_arrays = {k: np.asarray(jax.device_get(v))
-                            for k, v in extra_arrays.items()}
-        if self._thread is not None:
-            self._thread.join()
-        if self.async_save:
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, extra or {},
-                                          extra_arrays), daemon=True)
-            self._thread.start()
+        instead of being JSON-encoded into `extra`. In a multi-process job
+        this is a collective: every process must call it at the same step
+        (the gather all-gathers process-spanning shards; process 0 writes)."""
+        self.wait()  # join + surface any previous async write, then barrier
+        if self.multiprocess:
+            host_tree = runtime.fully_replicated_host(tree)
+            if extra_arrays is not None:
+                extra_arrays = runtime.fully_replicated_host(extra_arrays)
         else:
-            self._write(step, host_tree, extra or {}, extra_arrays)
+            host_tree = jax.tree_util.tree_map(
+                lambda x: np.asarray(jax.device_get(x)), tree)
+            if extra_arrays is not None:
+                extra_arrays = {k: np.asarray(jax.device_get(v))
+                                for k, v in extra_arrays.items()}
+        if self.is_writer:
+            if self.async_save:
+                self._thread = threading.Thread(
+                    target=self._write_guarded,
+                    args=(step, host_tree, extra or {}, extra_arrays),
+                    daemon=True)
+                self._thread.start()
+            else:
+                self._write(step, host_tree, extra or {}, extra_arrays)
+        # the commit is acknowledged fleet-wide at the next wait(): a
+        # barrier here would block the step loop on the async write
+        self._pending_commit = self.multiprocess
+
+    def _write_guarded(self, *args):
+        try:
+            self._write(*args)
+        except BaseException as e:  # noqa: BLE001 - surfaced on next save/wait
+            self._error = e
 
     def _write(self, step: int, host_tree, extra: dict,
                extra_arrays: Optional[dict] = None):
+        self._reap_orphans(keep_step=step)
         tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
         final = os.path.join(self.dir, f"step_{step:09d}")
         if os.path.exists(tmp):
@@ -85,19 +136,42 @@ class CheckpointManager:
         os.rename(tmp, final)  # atomic commit
         self._gc()
 
+    def _reap_orphans(self, keep_step: Optional[int] = None):
+        """Remove `.tmp_step_*` debris a crash-mid-save left behind (the
+        arrays may exist but without the DONE+rename commit they are
+        invisible to all_steps — and unreclaimed, they leak a full
+        checkpoint of disk per crash)."""
+        keep = None if keep_step is None else f".tmp_step_{keep_step:09d}"
+        for name in os.listdir(self.dir):
+            if name.startswith(".tmp_step_") and name != keep:
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+
     def wait(self):
+        """Block until any in-flight async save is durably committed; raise
+        if the background write failed. Multi-process: also the commit
+        barrier — every process must call (the Trainer's loop does so
+        symmetrically via save()/restore()/latest_step())."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("checkpoint background write failed") from err
+        if self._pending_commit:
+            self._pending_commit = False
+            runtime.barrier("ckpt_commit")
 
     def _gc(self):
-        steps = self.all_steps()
+        steps = self.all_steps(_wait=False)
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
 
     # -- restore -----------------------------------------------------------
 
-    def all_steps(self):
+    def all_steps(self, _wait: bool = True):
+        if _wait:
+            self.wait()
         out = []
         for name in sorted(os.listdir(self.dir)):
             if name.startswith("step_") and \
@@ -112,9 +186,13 @@ class CheckpointManager:
     def restore(self, step: Optional[int] = None, target: Any = None,
                 shardings: Any = None):
         """Returns (tree, step, extra). `target` supplies the treedef;
-        `shardings` (optional pytree of NamedSharding) re-shards on load.
-        Arrays saved via `extra_arrays` come back under extra["_arrays"]
-        ({name: np.ndarray})."""
+        `shardings` (optional pytree of NamedSharding) re-shards on load —
+        built against the *current* mesh, so a checkpoint taken on one
+        process/host count restores onto another (each leaf is materialised
+        shard-by-shard via make_array_from_callback, which is correct
+        whether or not the sharding spans processes). Arrays saved via
+        `extra_arrays` come back under extra["_arrays"] ({name: np.ndarray})."""
+        self.wait()  # an in-flight async save may be about to commit `step`
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None, None
@@ -129,8 +207,13 @@ class CheckpointManager:
         else:
             raise ValueError("restore requires a `target` pytree for the treedef")
         if shardings is not None:
-            tree = jax.tree_util.tree_map(
-                lambda x, s: jax.device_put(x, s), tree, shardings)
+            def put(x, s):
+                if isinstance(s, jax.sharding.Sharding):
+                    x = np.asarray(x)
+                    return jax.make_array_from_callback(
+                        x.shape, s, lambda idx: x[idx])
+                return jax.device_put(x, s)
+            tree = jax.tree_util.tree_map(put, tree, shardings)
         extra = json.loads(meta["extra"]) if meta.get("extra") else {}
         xa_path = os.path.join(path, "extra_arrays.npz")
         if os.path.exists(xa_path):

@@ -109,6 +109,14 @@ class SpionState:
         return st
 
 
+def plan_digest(arrays: Optional[dict], block) -> str:
+    """Digest of a plan's table arrays + block size — the value
+    assert_in_sync compares across processes after a broadcast or a
+    checkpoint restore (divergent plans must fail loudly, DESIGN.md §12)."""
+    from repro.distributed import runtime
+    return runtime.payload_digest(arrays or {}, {"block": int(block)})
+
+
 class SpionController:
     def __init__(self, spion_cfg: SpionConfig, *, causal: bool, seq_len: int):
         self.cfg = spion_cfg
@@ -155,6 +163,19 @@ class SpionController:
         return SparseAttentionExec(tables, block=tables["block"], halo=halo,
                                    phase=phase)
 
+    def verify_plan_sync(self, state: SpionState, tag: str = "spion_plan_restore"):
+        """Multi-process: assert every process holds the SAME plan (digest
+        over tables + block). Called after a checkpoint restore — each
+        process reads the checkpoint independently, and a torn read or a
+        mixed-up checkpoint dir on one host must not let that host train
+        through a different sparsity pattern. No-op single-process or in
+        the dense phase."""
+        from repro.distributed import runtime
+        if runtime.process_count() <= 1 or state.tables is None:
+            return
+        runtime.assert_in_sync(
+            tag, plan_digest(state.table_arrays(), state.tables["block"]))
+
     # -- per-epoch update (paper Alg. 2 lines 7-12) ----------------------------
 
     def observe_epoch(self, state: SpionState, pooled: np.ndarray,
@@ -185,7 +206,39 @@ class SpionController:
         """Pattern generation for every layer; builds the full SparsityPlan:
         stacked padded BCSR plus the transposed tables at the true max
         column population KT* (host-side, once — the fused VJP's dK/dV grid
-        then runs (N, ncb, KT*, G) with no per-step transpose)."""
+        then runs (N, ncb, KT*, G) with no per-step transpose).
+
+        Single-controller in a multi-process job (DESIGN.md §12): the
+        flood-fill runs ONLY on process 0 and the plan arrays are broadcast
+        to every process through a device collective, followed by a digest
+        check — N processes flood-filling independently is N chances for a
+        float tie-break to diverge, and two hosts running different
+        sparsity patterns through the kernels would corrupt training
+        silently. The digest check turns that failure mode into a loud
+        crash."""
+        from repro.distributed import runtime
+        if runtime.process_count() > 1:
+            if runtime.is_coordinator():
+                state = self._generate_local(state, pooled)
+                arrays = state.table_arrays()
+                meta = {"block": int(state.tables["block"]),
+                        "plan_stats": state.plan_stats,
+                        "density": state.density}
+            else:
+                arrays, meta = None, None
+            arrays, meta = runtime.broadcast_arrays(arrays, meta)
+            runtime.assert_in_sync(
+                "spion_plan", plan_digest(arrays, meta["block"]))
+            state.tables = {k: jnp.asarray(np.asarray(v, np.int32))
+                            for k, v in arrays.items()}
+            state.tables["block"] = int(meta["block"])
+            state.plan_stats = meta["plan_stats"]
+            state.density = meta["density"]
+            state.phase = "sparse"
+            return state
+        return self._generate_local(state, pooled)
+
+    def _generate_local(self, state: SpionState, pooled: np.ndarray) -> SpionState:
         pooled = np.asarray(pooled, np.float64)
         Ly = pooled.shape[0]
         masks = [

@@ -1,3 +1,4 @@
+from repro.distributed import runtime  # noqa: F401
 from repro.distributed.sharding import (  # noqa: F401
     constrain,
     mesh_context,

@@ -1,0 +1,85 @@
+"""Fault injection for the multi-process recovery tests and the
+`faultrecovery` bench: deterministic process kills at a chosen step, and a
+flaky-step wrapper for exercising StepSupervisor's retry/backoff path.
+
+The kill is env-driven so a subprocess launcher can arm a specific worker
+without the training script knowing anything about the experiment:
+
+  SPION_CHAOS_KILL_STEP=11      kill when the training step counter reaches 11
+  SPION_CHAOS_KILL_PROC=1       only on jax.process_index() == 1 (default: all)
+  SPION_CHAOS_SIGNAL=KILL       KILL (hard death, tests the resume-from-last-
+                                commit path) or TERM (delivered to self, so
+                                the preemption handler runs the graceful
+                                save/exit protocol)
+
+`Trainer` polls `ChaosMonkey.from_env()` by default, so arming chaos is
+purely a launcher concern. An unarmed monkey is inert.
+"""
+from __future__ import annotations
+
+import os
+import signal
+from typing import Optional
+
+
+class ChaosMonkey:
+    """Kills this process when the step counter reaches `kill_step`."""
+
+    def __init__(self, kill_step: Optional[int] = None,
+                 kill_process: Optional[int] = None, sig: str = "KILL"):
+        self.kill_step = kill_step
+        self.kill_process = kill_process
+        self.sig = sig.upper()
+        if self.sig not in ("KILL", "TERM"):
+            raise ValueError(f"SPION_CHAOS_SIGNAL must be KILL or TERM, "
+                             f"got {sig!r}")
+        self.fired = False
+
+    @classmethod
+    def from_env(cls) -> Optional["ChaosMonkey"]:
+        step = os.environ.get("SPION_CHAOS_KILL_STEP")
+        if step is None:
+            return None
+        proc = os.environ.get("SPION_CHAOS_KILL_PROC")
+        return cls(kill_step=int(step),
+                   kill_process=None if proc is None else int(proc),
+                   sig=os.environ.get("SPION_CHAOS_SIGNAL", "KILL"))
+
+    def armed_for(self, step: int) -> bool:
+        if self.fired or self.kill_step is None or step < self.kill_step:
+            return False
+        if self.kill_process is not None:
+            import jax
+            if jax.process_index() != self.kill_process:
+                return False
+        return True
+
+    def maybe_kill(self, step: int) -> None:
+        """Call at the top of each training-loop iteration. SIGKILL is an
+        abrupt death (no cleanup, no flush — the honest preemption model);
+        SIGTERM goes through the installed handler, i.e. the graceful
+        save-and-exit protocol."""
+        if not self.armed_for(step):
+            return
+        self.fired = True
+        os.kill(os.getpid(),
+                signal.SIGKILL if self.sig == "KILL" else signal.SIGTERM)
+
+
+def flaky(step_fn, fail_on_calls, exc_factory=None):
+    """Wrap a step fn to raise on the given 1-based call numbers — the
+    deterministic stand-in for transient infrastructure failures when
+    testing StepSupervisor's retry/backoff. `exc_factory` builds the
+    exception (default: RuntimeError tagged with the call number)."""
+    fail_on_calls = set(fail_on_calls)
+    calls = {"n": 0}
+
+    def wrapped(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] in fail_on_calls:
+            raise (exc_factory(calls["n"]) if exc_factory
+                   else RuntimeError(f"injected fault on call {calls['n']}"))
+        return step_fn(*args, **kwargs)
+
+    wrapped.calls = calls
+    return wrapped

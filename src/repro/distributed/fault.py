@@ -13,6 +13,7 @@ unit-tested here. train.py wires it into the step loop:
 from __future__ import annotations
 
 import math
+import random
 import time
 from typing import Callable, Optional
 
@@ -54,19 +55,37 @@ class StragglerMonitor:
 
 class StepSupervisor:
     """Run steps with crash-restart: on an *infrastructure* failure
-    (RuntimeError/OSError — device loss, preemption, I/O), restore() is
-    called and the step retried up to `max_retries` times. Programming
-    errors (TypeError/ValueError/trace errors) re-raise immediately —
-    retrying those would silently mask real bugs."""
+    (RuntimeError/OSError — device loss, preemption, I/O; ConnectionError
+    is already an OSError subclass), restore() is called and the step
+    retried up to `max_retries` times, with exponential backoff + jitter
+    between attempts so a fleet of supervisors recovering from the same
+    shared-resource failure doesn't retry in thundering lockstep.
+    Programming errors (TypeError/ValueError/trace errors) re-raise
+    immediately — retrying those would silently mask real bugs."""
 
-    RETRYABLE = (RuntimeError, OSError, ConnectionError)
+    RETRYABLE = (RuntimeError, OSError)
 
     def __init__(self, restore_fn: Callable[[], None], max_retries: int = 3,
-                 on_failure: Optional[Callable[[Exception], None]] = None):
+                 on_failure: Optional[Callable[[Exception], None]] = None,
+                 backoff_base: float = 0.5, backoff_max: float = 30.0,
+                 jitter: float = 0.25,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 rng: Optional[random.Random] = None):
         self.restore_fn = restore_fn
         self.max_retries = max_retries
         self.on_failure = on_failure
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self.jitter = jitter
+        self.sleep_fn = sleep_fn
+        self.rng = rng or random.Random()
         self.restarts = 0
+
+    def backoff(self, attempt: int) -> float:
+        """Delay before retry `attempt` (0-based): capped exponential with
+        multiplicative jitter in [1, 1 + jitter)."""
+        base = min(self.backoff_base * (2.0 ** attempt), self.backoff_max)
+        return base * (1.0 + self.jitter * self.rng.random())
 
     def run(self, step_fn: Callable, *args, **kwargs):
         for attempt in range(self.max_retries + 1):
@@ -78,6 +97,7 @@ class StepSupervisor:
                     self.on_failure(e)
                 if attempt == self.max_retries:
                     raise
+                self.sleep_fn(self.backoff(attempt))
                 self.restore_fn()
 
 
@@ -91,7 +111,10 @@ class Heartbeat:
         self.last = 0.0
 
     def beat(self, now: Optional[float] = None):
-        now = now or time.time()
+        # `now or time.time()` would treat an explicit now=0.0 (epoch, or a
+        # test's monotonic-from-zero clock) as "not provided"
+        if now is None:
+            now = time.time()
         if now - self.last >= self.interval:
             with open(self.path, "w") as f:
                 f.write(str(now))
@@ -99,7 +122,8 @@ class Heartbeat:
 
     @staticmethod
     def dead_hosts(paths, timeout: float, now: Optional[float] = None):
-        now = now or time.time()
+        if now is None:
+            now = time.time()
         dead = []
         for p in paths:
             try:

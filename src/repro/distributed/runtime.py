@@ -1,0 +1,302 @@
+"""Multi-process runtime: `jax.distributed` bring-up and the host<->device
+plumbing that makes single-controller training real (DESIGN.md §12).
+
+Everything else in this repo is written against the SPMD model — every
+process runs the same program over a process-spanning mesh — and this module
+owns the three places where that symmetry must be broken or enforced:
+
+  - **Bring-up** (`initialize`): one call, before any other jax use, wires
+    the process into the coordination service. Parameters come from explicit
+    args or the `SPION_COORDINATOR` / `SPION_NUM_PROCESSES` /
+    `SPION_PROCESS_ID` environment (set by the launcher); single-process
+    runs skip it entirely and every helper below degrades to a no-op. On CPU
+    backends the cross-process collective implementation is pinned to gloo —
+    without it a multi-process CPU mesh initialises but hangs at the first
+    psum.
+
+  - **Single-controller host data** (`broadcast_arrays`, `host_allgather`,
+    `assert_in_sync`): host-side work that must not run N times (flood-fill
+    pattern generation, checkpoint decisions) runs on process 0 only and its
+    results move to the other processes through a *device* collective — the
+    same fabric the training step already trusts, no side channel. The
+    payload protocol is two fixed-shape broadcasts (lengths, then one uint8
+    buffer with a JSON header), so the non-coordinators need to know nothing
+    about the content in advance. `assert_in_sync` is the loud-failure half:
+    each process contributes a digest of what it *actually* holds and every
+    process verifies all digests match, so a divergent SparsityPlan (or a
+    torn checkpoint) kills the job instead of silently desynchronising the
+    kernels.
+
+  - **Synchronisation** (`barrier`, `any_flag`): a named rendezvous for the
+    checkpoint commit protocol, and a cheap every-step OR-reduction that
+    turns a per-process preemption signal (SIGTERM lands on one host) into a
+    fleet-wide, same-step decision to save and exit.
+
+All collectives here run on a private 1-D mesh over every global device and
+are therefore ordered with respect to the training step's collectives as
+long as they are issued from the main thread — never call into this module
+from a background thread while steps are running (the CheckpointManager's
+commit barrier is deferred to `wait()` for exactly this reason).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# env vars the launcher sets for each worker (scripts/tests/schedulers)
+ENV_COORDINATOR = "SPION_COORDINATOR"
+ENV_NUM_PROCESSES = "SPION_NUM_PROCESSES"
+ENV_PROCESS_ID = "SPION_PROCESS_ID"
+
+_initialized = False
+
+
+def initialize(coordinator: Optional[str] = None,
+               num_processes: Optional[int] = None,
+               process_id: Optional[int] = None) -> bool:
+    """Join the `jax.distributed` coordination service (idempotent).
+
+    Must run before any other jax call touches the backend. Args fall back
+    to the SPION_* env vars; with neither, this is a single-process run and
+    the call is a no-op returning False. Returns True when the process is
+    part of a multi-process (or explicitly coordinated) job."""
+    global _initialized
+    if _initialized:
+        return True
+    coordinator = coordinator or os.environ.get(ENV_COORDINATOR)
+    if num_processes is None and os.environ.get(ENV_NUM_PROCESSES):
+        num_processes = int(os.environ[ENV_NUM_PROCESSES])
+    if process_id is None and os.environ.get(ENV_PROCESS_ID):
+        process_id = int(os.environ[ENV_PROCESS_ID])
+    if coordinator is None or num_processes is None:
+        return False
+    try:
+        # CPU cross-process collectives need gloo; the config is consulted
+        # only by the CPU client, so setting it is harmless on TPU pods
+        # (where the ICI collectives ignore it).
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # pragma: no cover - config renamed/removed upstream
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    _initialized = True
+    return True
+
+
+def is_initialized() -> bool:
+    return _initialized
+
+
+def process_index() -> int:
+    return jax.process_index()
+
+
+def process_count() -> int:
+    return jax.process_count()
+
+
+def is_coordinator() -> bool:
+    """Single-controller gate: host-side work (flood-fill, checkpoint
+    writes, logging) runs only where this is True."""
+    return jax.process_index() == 0
+
+
+# ---------------------------------------------------------------------------
+# device-collective primitives
+# ---------------------------------------------------------------------------
+
+def _collective_mesh() -> Mesh:
+    """Private 1-D mesh over every global device, for the host-data
+    collectives. Rebuilt per call (cheap) so it always reflects the live
+    device set — the runtime survives re-initialisation across restarts."""
+    return Mesh(np.asarray(jax.devices()), ("bcast",))
+
+
+def _sum0(mesh: Mesh):
+    return jax.jit(lambda a: jnp.sum(a, axis=0),
+                   out_shardings=NamedSharding(mesh, P()))
+
+
+def _device_broadcast(x: np.ndarray) -> np.ndarray:
+    """All processes receive global-device-0's copy of `x` (a device
+    collective: device 0 contributes the payload, everyone else zeros, and
+    a replicated sum over the device axis reconstructs it everywhere).
+    Shape/dtype must already agree across processes."""
+    devs = jax.devices()
+    mesh = _collective_mesh()
+    shards = []
+    for d in jax.local_devices():
+        payload = x if d == devs[0] else np.zeros_like(x)
+        shards.append(jax.device_put(payload[None], d))
+    garr = jax.make_array_from_single_device_arrays(
+        (len(devs),) + x.shape, NamedSharding(mesh, P("bcast")), shards)
+    # jnp.sum promotes small int dtypes (uint8 -> uint32); only one device
+    # contributed non-zeros, so the values fit — cast back
+    return np.asarray(_sum0(mesh)(garr)).astype(x.dtype)
+
+
+def host_allgather(x: np.ndarray) -> np.ndarray:
+    """Gather one host array per process -> (process_count, *x.shape) on
+    every process. Each process's FIRST local device contributes its value
+    into the process's slot; the sum over devices stacks them."""
+    x = np.asarray(x)
+    if jax.process_count() == 1:
+        return x[None]
+    nproc = jax.process_count()
+    mesh = _collective_mesh()
+    shards = []
+    for i, d in enumerate(jax.local_devices()):
+        buf = np.zeros((nproc,) + x.shape, x.dtype)
+        if i == 0:
+            buf[jax.process_index()] = x
+        shards.append(jax.device_put(buf[None], d))
+    garr = jax.make_array_from_single_device_arrays(
+        (len(jax.devices()), nproc) + x.shape,
+        NamedSharding(mesh, P("bcast")), shards)
+    return np.asarray(_sum0(mesh)(garr)).astype(x.dtype)
+
+
+def barrier(name: str = "") -> None:
+    """Named cross-process rendezvous. The allgather doubles as a sanity
+    check that every process is at the *same* barrier (the name digests
+    must agree) — two processes meeting at different barriers is a
+    programming error worth failing loudly on, not deadlocking over."""
+    if jax.process_count() == 1:
+        return
+    tag = np.frombuffer(hashlib.sha256(name.encode()).digest()[:8],
+                        np.uint8).copy()
+    got = host_allgather(tag)
+    if not (got == tag[None]).all():
+        raise RuntimeError(
+            f"barrier({name!r}): processes met at different barriers "
+            f"(tag rows: {got.tolist()})")
+
+
+def any_flag(flag: bool) -> bool:
+    """Fleet-wide OR of a per-process bool (one tiny device collective).
+    The preemption protocol: SIGTERM lands on one host and sets its local
+    flag; every step all processes reduce the flag, so they all learn about
+    the preemption at the same step boundary and can run the (collective)
+    checkpoint save in lockstep."""
+    if jax.process_count() == 1:
+        return bool(flag)
+    got = host_allgather(np.asarray([1 if flag else 0], np.int32))
+    return bool(got.sum() > 0)
+
+
+# ---------------------------------------------------------------------------
+# single-controller payloads
+# ---------------------------------------------------------------------------
+
+def payload_digest(arrays: Optional[dict], meta: Optional[dict] = None) -> str:
+    """Deterministic hex digest of an {name: ndarray} payload (+ JSON-able
+    meta): name/dtype/shape/bytes all participate, so a single flipped int32
+    in a plan table changes the digest."""
+    h = hashlib.sha256()
+    for k in sorted(arrays or {}):
+        a = np.ascontiguousarray(np.asarray((arrays or {})[k]))
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    if meta is not None:
+        h.update(json.dumps(meta, sort_keys=True).encode())
+    return h.hexdigest()[:32]
+
+
+def broadcast_arrays(arrays: Optional[dict], meta: Optional[dict] = None):
+    """Coordinator's ({name: ndarray}, meta) -> every process, via device
+    collectives. Non-coordinators may pass anything (ignored); they learn
+    shapes/dtypes from the broadcast JSON header. Returns (arrays, meta)
+    everywhere. Single-process: identity."""
+    if jax.process_count() == 1:
+        return arrays, meta
+    if is_coordinator():
+        arrays = {k: np.ascontiguousarray(np.asarray(v))
+                  for k, v in (arrays or {}).items()}
+        header = json.dumps({
+            "meta": meta,
+            "names": sorted(arrays),
+            "specs": {k: [str(arrays[k].dtype), list(arrays[k].shape)]
+                      for k in arrays},
+        }).encode()
+        payload = b"".join(arrays[k].tobytes() for k in sorted(arrays))
+        lengths = np.asarray([len(header), len(payload)], np.int64)
+        buf = np.frombuffer(header + payload, np.uint8).copy()
+    else:
+        lengths = np.zeros(2, np.int64)
+        buf = None
+    lengths = _device_broadcast(lengths)
+    hlen, plen = int(lengths[0]), int(lengths[1])
+    if buf is None:
+        buf = np.zeros(hlen + plen, np.uint8)
+    buf = _device_broadcast(buf)
+    head = json.loads(bytes(buf[:hlen]))
+    out, off = {}, hlen
+    for k in head["names"]:
+        dtype, shape = head["specs"][k]
+        n = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        out[k] = np.frombuffer(bytes(buf[off:off + n]),
+                               dtype=dtype).reshape(shape).copy()
+        off += n
+    return out, head["meta"]
+
+
+def assert_in_sync(tag: str, digest: str) -> None:
+    """Every process contributes `digest`; all must match, else every
+    process raises with the full per-process table. This is the loud
+    failure mode for divergent single-controller state — a plan whose
+    tables differ across processes would otherwise silently run different
+    sparsity patterns through the kernels on different hosts."""
+    if jax.process_count() == 1:
+        return
+    d = np.frombuffer(bytes.fromhex(digest.ljust(32, "0")[:32]),
+                      np.uint8).copy()
+    got = host_allgather(d)
+    if not (got == got[0][None]).all():
+        rows = {p: bytes(got[p]).hex() for p in range(got.shape[0])}
+        raise RuntimeError(
+            f"assert_in_sync({tag!r}): digest mismatch across processes — "
+            f"{rows} (local process {jax.process_index()})")
+
+
+# ---------------------------------------------------------------------------
+# host <-> global-array movement
+# ---------------------------------------------------------------------------
+
+def make_global(mesh: Mesh, tree, pspecs):
+    """Host pytree (full global content on every process) -> committed
+    global jax.Arrays sharded per `pspecs` over `mesh`. The callback form
+    slices each device's shard locally, so it works regardless of how many
+    processes the mesh spans (and avoids the same-process device_put
+    fast-path semantics diverging from the multi-process path)."""
+    def one(x, spec):
+        x = np.asarray(x)
+        s = NamedSharding(mesh, spec)
+        return jax.make_array_from_callback(x.shape, s, lambda idx: x[idx])
+    return jax.tree_util.tree_map(
+        one, tree, pspecs, is_leaf=lambda v: isinstance(v, P))
+
+
+def fully_replicated_host(tree):
+    """Pytree of jax.Arrays (possibly sharded across processes) -> host
+    numpy, by an all-gathering identity jit with replicated out_shardings.
+    A collective: every process must call it together. Host/numpy leaves
+    pass through; fully-addressable arrays skip the collective."""
+    def one(x):
+        if not isinstance(x, jax.Array):
+            return np.asarray(x)
+        if x.is_fully_addressable:
+            return np.asarray(jax.device_get(x))
+        mesh = x.sharding.mesh
+        rep = jax.jit(lambda a: a, out_shardings=NamedSharding(mesh, P()))(x)
+        return np.asarray(rep)
+    return jax.tree_util.tree_map(one, tree)

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
+from repro.distributed import runtime
 from repro.distributed.sharding import (kernel_pspecs_from_axes,
                                         kernel_seq_axis, kernel_shard_axes)
 from repro.kernels.block_sparse_attn import fused_block_sparse_attention
@@ -250,12 +251,17 @@ def sharded_fused_attention(mesh: Mesh, q, k, v, col_idx, nvalid, *, block,
                 f"kv_heads={KV}). Narrow the pattern (or supply the "
                 f"SparsityPlan halo), fix the divisibility, or use "
                 f"kernel='jnp' (the GSPMD path).")
-        warnings.warn(
-            f"sharded_fused_attention: mesh {dict(mesh.shape)} has a 'seq' "
-            f"axis but the kernel falls back to batch/KV sharding — "
-            f"{seq_reason}. The kernel work is replicated |seq|="
-            f"{mesh.shape['seq']}x; narrow the pattern or drop the 'seq' "
-            f"axis.", stacklevel=2)
+        if runtime.is_coordinator():
+            # every process takes this SPMD branch together; on a
+            # multi-host fleet one copy of the warning beats N identical
+            # ones (the RuntimeErrors above stay per-process: a crash
+            # should explain itself in every worker's log)
+            warnings.warn(
+                f"sharded_fused_attention: mesh {dict(mesh.shape)} has a "
+                f"'seq' axis but the kernel falls back to batch/KV sharding "
+                f"— {seq_reason}. The kernel work is replicated |seq|="
+                f"{mesh.shape['seq']}x; narrow the pattern or drop the "
+                f"'seq' axis.", stacklevel=2)
     if baxes is None and kv_ax is None and seq is None:
         raise RuntimeError(
             f"sharded_fused_attention: no mesh axis shards the kernel on "

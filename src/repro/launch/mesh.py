@@ -57,6 +57,49 @@ def make_host_mesh():
     return make_mesh((n, 1), ("data", "model"))
 
 
+def make_distributed_mesh(*, model: int = 1, seq: int = 1,
+                          data: int | None = None):
+    """Process-spanning mesh for a `jax.distributed` job: the 'pod' axis is
+    exactly the process axis (batch data-parallelism across hosts — the
+    highest-latency fabric carries only the gradient all-reduce), and
+    seq/data/model fill each process's local devices (seq/model collectives
+    stay on the intra-host fabric).
+
+    Built by reshaping `jax.devices()` directly rather than via
+    mesh_utils.create_device_mesh: jax's global device order is
+    process-major, so the leading reshape axis IS the process boundary —
+    the property the single-controller broadcast, the checkpoint commit
+    barrier and the halo-exchange locality analysis all assume. An ICI-
+    optimising permutation that traded that alignment away for torus
+    locality would silently put 'pod' neighbours on different hosts.
+
+    Degrades cleanly to single-process (pod=1): the same axis names, so
+    pspecs and dispatch decisions are identical between a CI virtual-device
+    run and a real multi-host launch."""
+    import numpy as np
+    nproc = jax.process_count()
+    nloc = jax.local_device_count()
+    per = seq * model
+    if data is None:
+        if nloc % per:
+            raise ValueError(
+                f"local device count {nloc} not divisible by "
+                f"seq*model={per}")
+        data = nloc // per
+    if seq * data * model != nloc:
+        raise ValueError(
+            f"seq*data*model = {seq}*{data}*{model} != local device "
+            f"count {nloc}")
+    devs = np.asarray(jax.devices())
+    if seq > 1:
+        shape, axes = ((nproc, seq, data, model),
+                       ("pod", "seq", "data", "model"))
+    else:
+        shape, axes = (nproc, data, model), ("pod", "data", "model")
+    from jax.sharding import Mesh
+    return Mesh(devs.reshape(shape), axes)
+
+
 # Hardware constants for the roofline (TPU v5e per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -7,25 +7,39 @@
 
 CPU-runnable at reduced scale (examples/ wire it up); identical code paths
 lower onto the production meshes (launch/dryrun.py proves compile).
+
+Multi-host (DESIGN.md §12): launch one process per host with the SPION_*
+env vars (or --coordinator/--num-processes/--process-id), and the same loop
+becomes a fleet: `repro.distributed.runtime` joins jax.distributed, the mesh
+gains a process-spanning 'pod' axis (make_distributed_mesh), flood-fill runs
+single-controller on process 0 with the plan broadcast + digest-checked,
+checkpoints are process-0-written/all-read with a commit barrier, and a
+SIGTERM on any host triggers a fleet-wide same-step save and clean exit
+(elastic resume onto a different process count re-shards from the
+mesh-agnostic checkpoint and rebuilds the execs from the restored plan).
 """
 from __future__ import annotations
 
 import argparse
 import os
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core.spion import SpionController, SpionState
 from repro.data.synthetic import lm_batch_iterator
-from repro.distributed.fault import StepSupervisor, StragglerMonitor
-from repro.distributed.sharding import mesh_context
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_train_step
+from repro.distributed import runtime
+from repro.distributed.chaos import ChaosMonkey
+from repro.distributed.fault import Heartbeat, StepSupervisor, StragglerMonitor
+from repro.distributed.sharding import mesh_context, param_shardings
+from repro.launch.mesh import make_distributed_mesh
+from repro.launch.steps import batch_pspecs, make_train_step
 from repro.models.registry import build
 from repro.optim import adamw_init
 
@@ -46,7 +60,8 @@ def masters_of(params):
 class Trainer:
     def __init__(self, cfg, *, seq_len, batch, lr=3e-4, total_steps=1000,
                  ckpt_dir=None, mesh=None, seed=0, steps_per_epoch=50,
-                 data_iter=None, capture_batches=1, sparse_kernel=None):
+                 data_iter=None, data_fn=None, capture_batches=1,
+                 sparse_kernel=None, chaos=None, heartbeat_interval=5.0):
         self.cfg = cfg
         self.bundle = build(cfg)
         self.mesh = mesh
@@ -57,9 +72,31 @@ class Trainer:
         self.monitor = StragglerMonitor()
         self.ckpt = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
         self.step = 0
-        rng = np.random.default_rng(seed)
-        self.data = data_iter if data_iter is not None else lm_batch_iterator(
-            rng, batch=batch, seq_len=seq_len + 1, vocab=cfg.vocab_size)
+        # `data_fn(step) -> host batch` is the fault-tolerant data contract:
+        # step-indexed, so a resume replays the EXACT batch sequence the
+        # uninterrupted run would have seen (a bare iterator restarts from
+        # its beginning after a crash — fine for smoke runs, wrong for
+        # step-exact recovery). In multi-process runs data_fn must return
+        # the same *global* batch on every process; the 'pod'/'data' slice
+        # each device keeps is carved off when the batch goes global.
+        self.data_fn = data_fn
+        if data_fn is None:
+            rng = np.random.default_rng(seed)
+            self.data = data_iter if data_iter is not None else lm_batch_iterator(
+                rng, batch=batch, seq_len=seq_len + 1, vocab=cfg.vocab_size)
+        # fault machinery: chaos is env-armed by default (inert when the
+        # launcher sets no SPION_CHAOS_* vars); preemption flag set by the
+        # SIGTERM handler (install_preemption_handler) and OR-reduced
+        # across processes at each step boundary so the save runs in
+        # lockstep
+        self.chaos = chaos if chaos is not None else ChaosMonkey.from_env()
+        self._preempted = False
+        self.preempted = False          # observable: loop exited via preemption
+        self.heartbeat = None
+        if ckpt_dir:
+            self.heartbeat = Heartbeat(
+                os.path.join(ckpt_dir, f"hb_{runtime.process_index()}"),
+                interval=heartbeat_interval)
 
         params = self.bundle.init(jax.random.key(seed))
         self.params = masters_of(params)
@@ -75,11 +112,41 @@ class Trainer:
         self._sparse_step = jax.jit(make_train_step(
             cfg, spion=True, lr=lr, total_steps=total_steps,
             sparse_kernel=sparse_kernel), donate_argnums=(0, 1))
-        self._capture = jax.jit(
-            lambda p, b, f, blk: self.bundle.forward(
-                p, b, capture={"filt": f, "block": blk})[1]["captured"],
-            static_argnames=("blk",))
+        capture_fn = lambda p, b, f, blk: self.bundle.forward(
+            p, b, capture={"filt": f, "block": blk})[1]["captured"]
+        if mesh is not None and runtime.process_count() > 1:
+            # the capture stats feed the HOST-side flood-fill: with the mesh
+            # spanning processes the outputs must come back fully
+            # replicated, or np.asarray on a partially-addressable global
+            # array would throw on every process but 0
+            self._capture = jax.jit(capture_fn, static_argnames=("blk",),
+                                    out_shardings=NamedSharding(mesh, P()))
+        else:
+            self._capture = jax.jit(capture_fn, static_argnames=("blk",))
         self.supervisor = StepSupervisor(self._restore_latest)
+
+    # -- multi-process plumbing ----------------------------------------------
+
+    def install_preemption_handler(self):
+        """SIGTERM -> finish the in-flight step, then save and exit cleanly
+        (the fleet-wide OR in the loop makes every process save at the SAME
+        step even when the signal lands on one host). Main thread only."""
+        def _handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, _handler)
+
+    def _device_batch(self, batch):
+        """Host batch -> device. Multi-process: every process holds the same
+        global batch; build committed global arrays sharded over the
+        'pod'/'data' axes so each device keeps only its slice."""
+        if self.mesh is not None and runtime.process_count() > 1:
+            return runtime.make_global(
+                self.mesh, batch, batch_pspecs(self.cfg, batch, self.mesh))
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def _next_batch(self):
+        b = self.data_fn(self.step) if self.data_fn else next(self.data)
+        return self._device_batch(b)
 
     # -- checkpoint/restart --------------------------------------------------
 
@@ -89,7 +156,9 @@ class Trainer:
     def save(self):
         if self.ckpt:
             # plan tables go binary (extra_arrays) — the JSON extra keeps only
-            # scalars, so a production-size SparsityPlan doesn't bloat meta
+            # scalars, so a production-size SparsityPlan doesn't bloat meta.
+            # In multi-process runs this is a collective (all-gather to host
+            # on every process; process 0 writes) — every process calls it.
             arrays = self.spion_state.table_arrays()
             self.ckpt.save(
                 self.step, self._state_tree(),
@@ -98,10 +167,23 @@ class Trainer:
                 extra_arrays=None if arrays is None else
                 {f"spion_{k}": v for k, v in arrays.items()})
 
+    def _restore_shardings(self):
+        """Shardings for the state tree on the CURRENT mesh — the elastic
+        half of recovery: the checkpoint is mesh-agnostic (fully gathered),
+        and restore re-shards it for however many processes/devices this
+        incarnation of the job has."""
+        if self.mesh is None:
+            return None
+        psh = param_shardings(self.mesh, self.params)
+        rep = NamedSharding(self.mesh, P())
+        return {"params": psh,
+                "opt": {"mu": psh, "nu": psh, "count": rep}}
+
     def _restore_latest(self):
         if not self.ckpt:
             return
-        tree, step, extra = self.ckpt.restore(target=self._state_tree())
+        tree, step, extra = self.ckpt.restore(
+            target=self._state_tree(), shardings=self._restore_shardings())
         if tree is not None:
             self.params, self.opt = tree["params"], tree["opt"]
             self.step = extra.get("step", step or 0)
@@ -110,6 +192,10 @@ class Trainer:
                           for k, v in extra.get("_arrays", {}).items()
                           if k.startswith("spion_")} or None
                 self.spion_state = SpionState.from_py(extra["spion"], arrays)
+                # every process read the checkpoint independently; a torn
+                # read or mixed-up dir on one host must fail loudly, not
+                # train through a different pattern (DESIGN.md §12)
+                self.spion_ctl.verify_plan_sync(self.spion_state)
 
     def maybe_resume(self):
         if self.ckpt and self.ckpt.latest_step() is not None:
@@ -131,7 +217,9 @@ class Trainer:
         return metrics
 
     def _epoch_boundary(self, batch):
-        """SPION capture + transition check on a capture batch."""
+        """SPION capture + transition check on a capture batch. Pattern
+        generation inside observe_epoch is single-controller: process 0
+        flood-fills, everyone receives the broadcast plan (core/spion.py)."""
         cap = self.spion_ctl.capture_kwargs(self.spion_state)
         if cap is None:
             self.spion_state.epoch += 1
@@ -143,23 +231,41 @@ class Trainer:
         self.spion_state = self.spion_ctl.observe_epoch(
             self.spion_state, np.asarray(pooled), np.asarray(frob))
 
+    def _check_preempted(self) -> bool:
+        """Fleet-wide preemption decision, same answer on every process at
+        the same step (one tiny collective per step in multi-process runs)."""
+        if runtime.process_count() > 1:
+            return runtime.any_flag(self._preempted)
+        return self._preempted
+
     def train(self, num_steps, *, ckpt_every=100, log_every=10, log=print):
+        log0 = log if runtime.is_coordinator() else (lambda *a, **k: None)
         with mesh_context(self.mesh):
             t_total = time.time()
             losses = []
             target = self.step + num_steps
             while self.step < target:
-                batch = next(self.data)
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                if self.chaos:
+                    self.chaos.maybe_kill(self.step)
+                if self._check_preempted():
+                    self.preempted = True
+                    self.save()
+                    if self.ckpt:
+                        self.ckpt.wait()
+                    log0(f"preempted: saved step {self.step}, exiting")
+                    return losses
+                batch = self._next_batch()
                 t0 = time.time()
                 metrics = self.supervisor.run(self._one_step, batch)
                 dt = time.time() - t0
                 straggler = self.monitor.observe(dt)
+                if self.heartbeat:
+                    self.heartbeat.beat()
                 losses.append(float(metrics["loss"]))
                 if self.step % log_every == 0:
-                    log(f"step {self.step} loss {np.mean(losses[-log_every:]):.4f} "
-                        f"phase {self.spion_state.phase} dt {dt*1e3:.0f}ms"
-                        + (" [straggler]" if straggler else ""))
+                    log0(f"step {self.step} loss {np.mean(losses[-log_every:]):.4f} "
+                         f"phase {self.spion_state.phase} dt {dt*1e3:.0f}ms"
+                         + (" [straggler]" if straggler else ""))
                 if self.step % self.steps_per_epoch == 0:
                     self._epoch_boundary(batch)
                 if ckpt_every and self.step % ckpt_every == 0:
@@ -167,8 +273,8 @@ class Trainer:
             self.save()
             if self.ckpt:
                 self.ckpt.wait()
-            log(f"done: {num_steps} steps in {time.time()-t_total:.1f}s, "
-                f"final phase={self.spion_state.phase} density={self.spion_state.density}")
+            log0(f"done: {num_steps} steps in {time.time()-t_total:.1f}s, "
+                 f"final phase={self.spion_state.phase} density={self.spion_state.density}")
             return losses
 
 
@@ -184,13 +290,23 @@ def main():
                     choices=["auto", "jnp", "fused"],
                     help="sparse-phase attention impl (default: cfg.spion.kernel; "
                          "auto = fused Pallas kernel on TPU, jnp path elsewhere)")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator (or env SPION_COORDINATOR); "
+                         "with --num-processes/--process-id this process joins "
+                         "a multi-host job")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     args = ap.parse_args()
+    distributed = runtime.initialize(args.coordinator, args.num_processes,
+                                     args.process_id)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    mesh = make_distributed_mesh() if distributed else None
     tr = Trainer(cfg, seq_len=args.seq_len, batch=args.batch,
-                 ckpt_dir=args.ckpt_dir, mesh=None,
+                 ckpt_dir=args.ckpt_dir, mesh=mesh,
                  sparse_kernel=args.sparse_kernel)
+    tr.install_preemption_handler()
     tr.maybe_resume()
     tr.train(args.steps)
 

@@ -99,6 +99,47 @@ def rng():
     return np.random.default_rng(0)
 
 
+def free_port():
+    """OS-assigned free TCP port for a jax.distributed coordinator."""
+    import socket
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def run_distributed_case(code, nproc=2, timeout=600, env_extra=None):
+    """Run `code` in `nproc` REAL jax.distributed CPU processes (gloo
+    collectives, one device each). The snippet reads MP_PID/MP_NPROC/MP_PORT
+    from the environment and must call repro.distributed.runtime.initialize
+    itself. All processes must exit 0; returns their stdouts in pid order."""
+    import pathlib
+    import subprocess
+    import sys as _sys
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    port = free_port()
+    procs = []
+    for pid in range(nproc):
+        env = {"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+               "PATH": "/usr/bin:/bin", "MP_PID": str(pid),
+               "MP_NPROC": str(nproc), "MP_PORT": str(port),
+               **(env_extra or {})}
+        procs.append(subprocess.Popen(
+            [_sys.executable, "-c", code], stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True, env=env, cwd=root))
+    outs = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=timeout)
+            outs.append((p.returncode, out, err))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for pid, (rc, out, err) in enumerate(outs):
+        assert rc == 0, f"process {pid} rc={rc}\n{err[-3000:]}"
+    return [out for _, out, _ in outs]
+
+
 def run_subprocess_case(code, devices=4):
     """Run a multi-device test snippet in a fresh interpreter with `devices`
     fake host devices (jax locks the device count at first init). Shared by

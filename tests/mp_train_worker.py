@@ -1,0 +1,93 @@
+"""Multi-process training worker for the fault-tolerance suite and the
+`faultrecovery` bench — NOT a pytest module (no test_ prefix).
+
+One OS process of an N-process `jax.distributed` CPU job. The launcher
+(tests/test_multiprocess.py, benchmarks/fault_recovery.py) spawns N of
+these with a shared coordinator port and checkpoint dir, optionally arming
+SPION_CHAOS_* to kill one mid-run. Deterministic by construction: params
+from a fixed seed, data step-indexed (data_fn), so any two runs — whatever
+their process count or crash history — walk the same global batch sequence
+and their per-step losses are comparable.
+
+Prints one `LOSS,<step>,<value>` line per step (process 0 only) and a final
+`WORKER_DONE step=<n> phase=<p> density=<d> preempted=<0|1>` marker.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pid", type=int, required=True)
+    ap.add_argument("--nproc", type=int, required=True)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--target-step", type=int, required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--steps-per-epoch", type=int, default=4)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--layers", type=int, default=2)
+    args = ap.parse_args()
+
+    from repro.distributed import runtime
+    runtime.initialize(f"localhost:{args.port}", args.nproc, args.pid)
+
+    from repro.configs import get_config
+    from repro.configs.base import SpionConfig
+    from repro.launch.mesh import make_distributed_mesh
+    from repro.launch.train import Trainer
+
+    # tiny but real: dense phase -> forced transition at epoch 2 -> sparse
+    # phase; jnp kernel (this suite proves the fault protocol, not Pallas)
+    cfg = get_config("spion-lra").replace(
+        num_layers=args.layers, d_ff=64, vocab_size=64,
+        spion=SpionConfig(enabled=True, variant="cf", conv_filter_size=5,
+                          block_size=16, alpha_quantile=0.85,
+                          transition_tol=1e9, min_dense_epochs=1,
+                          max_dense_epochs=2, kernel="jnp"))
+
+    B, S, vocab = args.batch, args.seq_len, cfg.vocab_size
+
+    def data_fn(step):
+        # step-indexed and process-independent: the SAME global batch on
+        # every process and every (re)incarnation of the job
+        rng = np.random.default_rng(77_000 + step)
+        toks = rng.integers(0, vocab, size=(B, S + 1))
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    mesh = make_distributed_mesh()
+    tr = Trainer(cfg, seq_len=S, batch=B, lr=1e-3,
+                 steps_per_epoch=args.steps_per_epoch,
+                 ckpt_dir=args.ckpt_dir, mesh=mesh, data_fn=data_fn)
+    tr.install_preemption_handler()
+    tr.maybe_resume()
+    start = tr.step
+    t0 = time.time()
+    losses = tr.train(args.target_step - start,
+                      ckpt_every=args.ckpt_every, log_every=10**9,
+                      log=lambda *a, **k: None)
+    dt = time.time() - t0
+    if runtime.is_coordinator():
+        for i, l in enumerate(losses):
+            print(f"LOSS,{start + i},{l:.8f}")
+        # wall clock over the whole loop (jit compile included) — the
+        # faultrecovery bench compares legs run under the same harness
+        print(f"WORKER_TIMING steps={len(losses)} seconds={dt:.3f}")
+    print(f"WORKER_DONE step={tr.step} phase={tr.spion_state.phase} "
+          f"density={tr.spion_state.density} "
+          f"preempted={int(tr.preempted)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

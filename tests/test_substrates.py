@@ -99,6 +99,80 @@ def test_checkpoint_async(tmp_path):
     assert mgr.latest_step() == 5
 
 
+def test_checkpoint_restore_waits_for_async_save(tmp_path):
+    """restore()/latest_step() immediately after an async save() must see
+    the step being committed, not a half-written (or absent) directory."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    tree = _tree()
+    mgr.save(5, tree)
+    assert mgr.latest_step() == 5          # no explicit wait() in between
+    mgr.save(6, tree)
+    got, step, _ = mgr.restore(target=tree)
+    assert step == 6
+    np.testing.assert_allclose(np.asarray(got["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+
+
+def test_checkpoint_async_write_failure_surfaces(tmp_path, monkeypatch):
+    """A failed background write must raise on the NEXT save()/wait(), not
+    die silently in the daemon thread (training would keep going with no
+    durable checkpoints)."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(1, _tree())
+    with pytest.raises(RuntimeError, match="background write failed"):
+        mgr.wait()
+    # the error is consumed once surfaced; the manager stays usable
+    monkeypatch.undo()
+    mgr.save(2, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(3, _tree())
+    with pytest.raises(RuntimeError, match="background write failed"):
+        mgr.save(4, _tree())  # surfacing via save()'s leading wait()
+
+
+def test_checkpoint_crash_mid_save_recovery(tmp_path):
+    """A save that died after writing arrays.npz but before the DONE+rename
+    commit: latest_step falls back to the previous committed step, and the
+    orphaned tmp dir is reaped by the next save instead of leaking a full
+    checkpoint of disk per crash."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    tree = _tree()
+    mgr.save(1, tree)
+    # simulate the crash: tmp dir with real payload, no DONE, no rename
+    orphan = tmp_path / ".tmp_step_000000002"
+    os.makedirs(orphan)
+    np.savez(orphan / "arrays.npz", leaf_0=np.zeros(3))
+    assert mgr.latest_step() == 1
+    got, step, _ = mgr.restore(target=tree)
+    assert step == 1
+    mgr.save(3, tree)
+    assert not orphan.exists()
+    assert mgr.all_steps() == [1, 3]
+
+
+def test_chaos_monkey_env_arming(monkeypatch):
+    from repro.distributed.chaos import ChaosMonkey
+    assert ChaosMonkey.from_env() is None  # unarmed by default
+    monkeypatch.setenv("SPION_CHAOS_KILL_STEP", "11")
+    monkeypatch.setenv("SPION_CHAOS_SIGNAL", "TERM")
+    cm = ChaosMonkey.from_env()
+    assert cm.kill_step == 11 and cm.sig == "TERM" and cm.kill_process is None
+    assert not cm.armed_for(10)
+    assert cm.armed_for(11) and cm.armed_for(12)
+    cm.fired = True
+    assert not cm.armed_for(12)  # one shot
+    with pytest.raises(ValueError):
+        ChaosMonkey(sig="SEGV")
+
+
 # -- fault tolerance ------------------------------------------------------------
 
 def test_supervisor_restores_and_retries():
@@ -107,7 +181,7 @@ def test_supervisor_restores_and_retries():
     def restore():
         calls["restore"] += 1
 
-    sup = StepSupervisor(restore, max_retries=3)
+    sup = StepSupervisor(restore, max_retries=3, sleep_fn=lambda d: None)
 
     def flaky():
         calls["step"] += 1
@@ -121,9 +195,58 @@ def test_supervisor_restores_and_retries():
 
 
 def test_supervisor_gives_up():
-    sup = StepSupervisor(lambda: None, max_retries=1)
+    sup = StepSupervisor(lambda: None, max_retries=1, sleep_fn=lambda d: None)
     with pytest.raises(RuntimeError):
         sup.run(lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+
+
+def test_supervisor_backoff_schedule():
+    """Capped exponential with bounded multiplicative jitter, one sleep per
+    retry (none after the final failing attempt)."""
+    import random
+    slept = []
+    sup = StepSupervisor(lambda: None, max_retries=4, backoff_base=0.5,
+                         backoff_max=2.0, jitter=0.25,
+                         sleep_fn=slept.append, rng=random.Random(0))
+    with pytest.raises(RuntimeError):
+        sup.run(lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    assert len(slept) == 4  # 5 attempts -> 4 backoffs between them
+    for i, d in enumerate(slept):
+        lo = min(0.5 * 2.0 ** i, 2.0)
+        assert lo <= d < lo * 1.25, (i, d)
+    assert slept[2] >= 2.0 and slept[3] < 2.0 * 1.25  # cap engaged
+
+
+def test_supervisor_retries_connection_error():
+    """ConnectionError is an OSError subclass — dropping it from RETRYABLE
+    must not change behaviour."""
+    assert ConnectionError not in StepSupervisor.RETRYABLE
+    sup = StepSupervisor(lambda: None, max_retries=2, sleep_fn=lambda d: None)
+    n = {"v": 0}
+
+    def step():
+        n["v"] += 1
+        if n["v"] == 1:
+            raise ConnectionError("coordinator hiccup")
+        return "ok"
+
+    assert sup.run(step) == "ok"
+
+
+def test_supervisor_no_retry_on_programming_error():
+    sup = StepSupervisor(lambda: None, max_retries=3, sleep_fn=lambda d: None)
+    with pytest.raises(ValueError):
+        sup.run(lambda: (_ for _ in ()).throw(ValueError("bad shape")))
+    assert sup.restarts == 0
+
+
+def test_flaky_wrapper_with_supervisor():
+    from repro.distributed.chaos import flaky
+    sup = StepSupervisor(lambda: None, max_retries=3, sleep_fn=lambda d: None)
+    step = flaky(lambda x: x * 2, fail_on_calls=(1, 2))
+    assert sup.run(step, 21) == 42
+    assert step.calls["n"] == 3
+    assert sup.restarts == 2
 
 
 def test_straggler_monitor_flags_outlier():
@@ -140,3 +263,18 @@ def test_heartbeat_dead_host_detection(tmp_path):
     Heartbeat(p2, interval=0).beat(now=2000.0)
     dead = Heartbeat.dead_hosts([p1, p2], timeout=500, now=2100.0)
     assert dead == [p1]
+
+
+def test_heartbeat_zero_timestamp(tmp_path):
+    """now=0.0 is a legitimate clock value (monotonic-from-zero test clocks);
+    the old `now or time.time()` treated it as "not provided" and substituted
+    wall time — beat() wrote an epoch-now timestamp and dead_hosts() compared
+    against the wrong now."""
+    p = str(tmp_path / "h")
+    hb = Heartbeat(p, interval=0.0)
+    hb.beat(now=0.0)
+    with open(p) as f:
+        assert float(f.read()) == 0.0
+    # a host last seen at t=0 evaluated at now=0 is alive, not 50-years dead
+    assert Heartbeat.dead_hosts([p], timeout=5.0, now=0.0) == []
+    assert Heartbeat.dead_hosts([p], timeout=5.0, now=6.0) == [p]
