@@ -1,8 +1,9 @@
 """Fault-recovery bench: training throughput before a kill vs after a
-resume, on a REAL 2-process `jax.distributed` CPU job.
+resume, on a REAL 2-process `jax.distributed` CPU job — plus the cost of a
+divergence rollback (DESIGN.md §13).
 
-Three legs over one checkpoint directory, driving tests/mp_train_worker.py
-(the same harness the tier1-multiprocess suite uses):
+Four legs driving tests/mp_train_worker.py (the same harness the
+tier1-multiprocess suite uses); the first three share one checkpoint dir:
 
   1. uninterrupted 2-process run through the dense->sparse transition
      (commits checkpoints along the way)           -> `before_kill` row
@@ -10,14 +11,21 @@ Three legs over one checkpoint directory, driving tests/mp_train_worker.py
      reaped by the harness, as a real job supervisor would)
   3. restart after the kill: restores the last committed step, digest-checks
      the restored plan, trains on                  -> `after_resume` row
+  4. fresh run with chaos NaN-poisoning the params at step 9: the sentinel
+     rolls back to the pinned good checkpoint, skips the data window, and
+     replays to the target                          -> `rollback` row
+     (us/step over the whole leg, replay included) and
+     `rollback_recovery_us` (quarantine + restore + skip wall time, from
+     the structured SPION_EVENT the rollback emits)
 
-Values are us/step over each completed leg (jit compile and — for leg 3 —
-checkpoint restore included: this row is recovery health, not kernel perf).
-The derived field records steps/s and where leg 3 resumed from. CI's
-bench-smoke job asserts both rows exist and error-free like any other row.
+Values are us/step over each completed leg (jit compile and — for legs 3/4
+— checkpoint restore included: these rows are recovery health, not kernel
+perf). CI's bench-smoke job asserts all four rows exist and are error-free
+like any other row.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import signal
@@ -109,3 +117,27 @@ def rows(out, smoke=False):
         out("faultrecovery.after_resume", secs / steps * 1e6,
             f"{steps / secs:.2f} steps/s (restore+compile incl; "
             f"resumed@{first})")
+
+    # leg 4: divergence rollback — single process, NaN-poisoned params at
+    # step 9 (checkpoints every 3): sentinel detects the non-finite loss,
+    # quarantines, restores the pinned good step, skips the window, replays
+    with tempfile.TemporaryDirectory() as roll_dir:
+        outs = _drain(_spawn(1, _free_port(), roll_dir, 12,
+                             chaos={"SPION_CHAOS_NAN_STEP": "9"},
+                             chaos_pid=0))
+        if any(rc != 0 for rc, _, _ in outs):
+            raise RuntimeError(f"rollback leg failed:\n{outs[0][2][-2000:]}")
+        ev = None
+        for m in re.finditer(r"^SPION_EVENT (\{.*\})$", outs[0][1], re.M):
+            cand = json.loads(m.group(1))
+            if cand.get("event") == "rollback":
+                ev = cand
+        if ev is None:
+            raise RuntimeError(
+                f"rollback leg emitted no rollback event:\n{outs[0][1]}")
+        steps, secs = _timing(outs[0][1])
+        out("faultrecovery.rollback", secs / steps * 1e6,
+            f"{steps / secs:.2f} steps/s (NaN@9 -> rolled back to step "
+            f"{ev['to_step']}, skipped {ev['skip']} data steps, replay incl)")
+        out("faultrecovery.rollback_recovery_us", ev["seconds"] * 1e6,
+            "quarantine + pinned-checkpoint restore + data-window skip")

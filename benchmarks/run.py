@@ -24,7 +24,9 @@ perf history that CI uploads as an artifact.
                    cache gather must beat dense at >= 4k
   faultrecovery    steps/s before a mid-sparse-phase SIGKILL vs after the
                    checkpoint-restore resume, on a real 2-process
-                   jax.distributed CPU job (recovery health, not kernel perf)
+                   jax.distributed CPU job, plus the divergence-rollback leg
+                   (NaN-poisoned step -> quarantine + pinned-checkpoint
+                   restore + replay) — recovery health, not kernel perf
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)

@@ -59,6 +59,7 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._pending_commit = False
+        self._pins: set = set()
         os.makedirs(directory, exist_ok=True)
 
     # -- multi-process roles ----------------------------------------------
@@ -140,10 +141,16 @@ class CheckpointManager:
         """Remove `.tmp_step_*` debris a crash-mid-save left behind (the
         arrays may exist but without the DONE+rename commit they are
         invisible to all_steps — and unreclaimed, they leak a full
-        checkpoint of disk per crash)."""
+        checkpoint of disk per crash). Pinned steps are exempt, like in
+        `_gc`: a rollback target must never be touched by cleanup."""
         keep = None if keep_step is None else f".tmp_step_{keep_step:09d}"
         for name in os.listdir(self.dir):
             if name.startswith(".tmp_step_") and name != keep:
+                try:
+                    if int(name.split("_")[-1]) in self._pins:
+                        continue
+                except ValueError:
+                    pass
                 shutil.rmtree(os.path.join(self.dir, name),
                               ignore_errors=True)
 
@@ -165,7 +172,49 @@ class CheckpointManager:
     def _gc(self):
         steps = self.all_steps(_wait=False)
         for s in steps[: -self.keep] if self.keep else []:
+            if s in self._pins:
+                continue  # a rollback target outlives the keep window
             shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # -- divergence rollback support ---------------------------------------
+
+    def pin(self, step: int):
+        """Exempt `step` from `_gc`/`_reap_orphans` until unpinned — the
+        divergence sentinel pins the last *good* checkpoint so the rollback
+        target can never age out of the keep window while training runs
+        past it. Pins are per-process in-memory state (each incarnation
+        re-pins the step it restores), read from the async-writer thread;
+        set mutation under the GIL is safe there."""
+        self._pins.add(int(step))
+
+    def unpin(self, step: int):
+        self._pins.discard(int(step))
+
+    def pinned(self):
+        return sorted(self._pins)
+
+    def quarantine_after(self, step: int):
+        """Move every committed checkpoint with step > `step` aside
+        (``step_X`` -> ``quarantined_step_X``): checkpoints saved after a
+        divergence point hold poisoned optimizer state, and a later
+        restore()/latest_step() must never pick one. Renamed dirs keep
+        their payload for forensics but are invisible to `all_steps` (the
+        ``step_`` prefix match). Multi-process: a collective like save —
+        every process calls it; the writer renames; the trailing barrier
+        guarantees no process restores a half-quarantined directory
+        listing."""
+        self.wait()
+        if self.is_writer:
+            for s in self.all_steps(_wait=False):
+                if s <= step:
+                    continue
+                src = os.path.join(self.dir, f"step_{s:09d}")
+                dst = os.path.join(self.dir, f"quarantined_step_{s:09d}")
+                if os.path.exists(dst):
+                    shutil.rmtree(dst)
+                os.rename(src, dst)
+        if self.multiprocess:
+            runtime.barrier("ckpt_quarantine")
 
     # -- restore -----------------------------------------------------------
 

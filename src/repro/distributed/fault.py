@@ -6,14 +6,24 @@ unit-tested here. train.py wires it into the step loop:
 
   - StepSupervisor: wraps the jitted step; on exception restores the last
     checkpoint and replays (checkpoint/restart fault tolerance).
-  - StragglerMonitor: per-step wall-time EWMA + z-score flags (on a pod this
-    feeds eviction / re-shard; elastic restore is covered by the
-    mesh-agnostic CheckpointManager).
+  - StragglerMonitor: per-step wall-time EWMA + z-score flags (repeat
+    offenders ride the heartbeat payload into the external supervisor's
+    respawn decision; elastic restore is covered by the mesh-agnostic
+    CheckpointManager).
+  - DivergenceSentinel: per-step loss NaN/inf + EWMA-spike detector — the
+    in-loop half of the rollback protocol (DESIGN.md §13).
+  - Heartbeat: per-process liveness file with a JSON payload
+    {ts, step, pid, phase, ...} so the external supervisor
+    (distributed/supervisor.py) can tell "process gone" (stale ts) from
+    "process alive but step frozen" (fresh ts, stale step).
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 import random
+import threading
 import time
 from typing import Callable, Optional
 
@@ -101,36 +111,144 @@ class StepSupervisor:
                 self.restore_fn()
 
 
+class DivergenceSentinel:
+    """Per-step loss health check: NaN/inf always flags; a finite loss
+    flags when it spikes past mean + z * std of the loss EWMA (the same
+    z-score machinery StragglerMonitor applies to step wall-times). A
+    flagged step is only a *local* observation — train.py OR-reduces it
+    fleet-wide (runtime.any_flags) so every process rolls back at the same
+    step (DESIGN.md §13). reset() after a rollback: the restored loss
+    trajectory restarts the EWMA rather than inheriting spike-adjacent
+    stats."""
+
+    def __init__(self, z: float = 8.0, warmup: int = 10, alpha: float = 0.05,
+                 spike: bool = True):
+        self.z = z
+        self.warmup = warmup
+        self.alpha = alpha
+        self.spike = spike
+        self.reset()
+
+    def reset(self):
+        self._mon = StragglerMonitor(alpha=self.alpha, z=self.z,
+                                     warmup=self.warmup)
+
+    def observe(self, loss: float) -> bool:
+        """True if `loss` is divergent (non-finite, or an upward spike)."""
+        if not math.isfinite(loss):
+            return True
+        if not self.spike:
+            return False
+        return self._mon.observe(loss)
+
+
 class Heartbeat:
-    """Host liveness file heartbeat (controller scans mtimes; hosts silent
-    for > timeout are declared dead and the job re-shards elastically)."""
+    """Host liveness file heartbeat. Each write is one JSON object
+    ``{"ts": ..., "pid": ..., "step": ..., "phase": ..., ...}`` committed
+    atomically (tmp + rename), so the external supervisor scanning the
+    files can distinguish "process gone" (stale ts) from "process alive but
+    step frozen" (fresh ts, stale step). `start_thread()` keeps ts fresh
+    from a daemon thread even while the main thread is stuck inside a step
+    (hung collective, compile) — exactly the case the step-progress check
+    exists for; the thread only touches the local filesystem, never a
+    collective, so it is safe off the main thread."""
 
     def __init__(self, path: str, interval: float = 10.0):
         self.path = path
         self.interval = interval
         self.last = 0.0
+        self._status: dict = {}
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
 
-    def beat(self, now: Optional[float] = None):
-        # `now or time.time()` would treat an explicit now=0.0 (epoch, or a
-        # test's monotonic-from-zero clock) as "not provided"
+    def beat(self, now: Optional[float] = None, step: Optional[int] = None,
+             phase: Optional[str] = None, extra: Optional[dict] = None):
+        """Update the payload fields and (at most every `interval`) write
+        the file. `now or time.time()` would treat an explicit now=0.0
+        (epoch, or a test's monotonic-from-zero clock) as "not provided"."""
         if now is None:
             now = time.time()
-        if now - self.last >= self.interval:
-            with open(self.path, "w") as f:
-                f.write(str(now))
-            self.last = now
+        with self._lock:
+            if step is not None:
+                self._status["step"] = int(step)
+            if phase is not None:
+                self._status["phase"] = str(phase)
+            if extra:
+                self._status.update(extra)
+            if now - self.last >= self.interval:
+                self._write(now)
+
+    def pulse(self, now: Optional[float] = None):
+        """Unconditional write with the latest status (the thread's beat)."""
+        with self._lock:
+            self._write(time.time() if now is None else now)
+
+    def _write(self, now: float):
+        # lock held by caller; atomic replace so the supervisor never reads
+        # a torn payload
+        payload = {"ts": now, "pid": os.getpid(), **self._status}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+        self.last = now
+
+    def start_thread(self):
+        """Refresh ts from a daemon thread every `interval` seconds (min
+        0.05 so interval=0 test heartbeats don't spin)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def _loop():
+            period = max(self.interval, 0.05)
+            while not self._stop.wait(period):
+                self.pulse()
+
+        self._thread = threading.Thread(target=_loop, daemon=True)
+        self._thread.start()
+
+    def stop_thread(self):
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+
+    @staticmethod
+    def read(path: str) -> Optional[dict]:
+        """Parse one heartbeat file -> payload dict, or None if missing or
+        unreadable. Legacy plain-timestamp files (pre-JSON format: the bare
+        float `beat` used to write) come back as {"ts": <float>}."""
+        try:
+            with open(path) as f:
+                raw = f.read().strip()
+        except OSError:
+            return None
+        if not raw:
+            return None
+        try:
+            obj = json.loads(raw)
+        except ValueError:
+            return None
+        if isinstance(obj, dict):
+            return obj
+        if isinstance(obj, (int, float)):
+            return {"ts": float(obj)}
+        return None
 
     @staticmethod
     def dead_hosts(paths, timeout: float, now: Optional[float] = None):
+        """Hosts whose last beat (JSON payload ts, or a legacy plain
+        timestamp) is older than `timeout` — missing/unparseable files
+        count as dead."""
         if now is None:
             now = time.time()
         dead = []
         for p in paths:
-            try:
-                with open(p) as f:
-                    t = float(f.read().strip() or 0)
-            except OSError:
-                t = 0.0
+            payload = Heartbeat.read(p)
+            t = float(payload.get("ts", 0.0)) if payload else 0.0
             if now - t > timeout:
                 dead.append(p)
         return dead

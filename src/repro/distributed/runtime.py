@@ -192,6 +192,29 @@ def any_flag(flag: bool) -> bool:
     return bool(got.sum() > 0)
 
 
+def any_flags(flags) -> list:
+    """Element-wise fleet-wide OR of several per-process bools in ONE
+    collective — the step loop carries two protocol flags (preempted,
+    diverged) and paying one allgather per flag per step would double the
+    per-step control-plane traffic for no reason. Same answer on every
+    process at the same step."""
+    flags = [bool(f) for f in flags]
+    if jax.process_count() == 1:
+        return flags
+    got = host_allgather(np.asarray([1 if f else 0 for f in flags], np.int32))
+    return [bool(v) for v in (got.sum(axis=0) > 0)]
+
+
+def max_value(value: int) -> int:
+    """Fleet-wide max of a per-process int (one collective). The rollback
+    protocol uses it to agree on the divergence step: any process may have
+    flagged locally, and every process must restore the same target."""
+    if jax.process_count() == 1:
+        return int(value)
+    got = host_allgather(np.asarray([value], np.int64))
+    return int(got.max())
+
+
 # ---------------------------------------------------------------------------
 # single-controller payloads
 # ---------------------------------------------------------------------------

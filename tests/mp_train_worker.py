@@ -2,15 +2,29 @@
 `faultrecovery` bench — NOT a pytest module (no test_ prefix).
 
 One OS process of an N-process `jax.distributed` CPU job. The launcher
-(tests/test_multiprocess.py, benchmarks/fault_recovery.py) spawns N of
+(tests/test_multiprocess.py, benchmarks/fault_recovery.py, or the
+self-healing supervisor `python -m repro.launch.supervise`) spawns N of
 these with a shared coordinator port and checkpoint dir, optionally arming
-SPION_CHAOS_* to kill one mid-run. Deterministic by construction: params
-from a fixed seed, data step-indexed (data_fn), so any two runs — whatever
-their process count or crash history — walk the same global batch sequence
-and their per-step losses are comparable.
+SPION_CHAOS_* to kill/hang/NaN-poison one mid-run. Deterministic by
+construction: params from a fixed seed, data step-indexed (data_fn), so any
+two runs — whatever their process count or crash history — walk the same
+global batch sequence and their per-step losses are comparable.
 
-Prints one `LOSS,<step>,<value>` line per step (process 0 only) and a final
-`WORKER_DONE step=<n> phase=<p> density=<d> preempted=<0|1>` marker.
+--pid/--nproc/--port are optional: when the supervisor launches us it sets
+SPION_COORDINATOR/SPION_NUM_PROCESSES/SPION_PROCESS_ID instead and
+runtime.initialize() picks those up.
+
+Prints one `LOSS,<step>,<value>` line per step (process 0 only) LIVE as
+steps complete — a killed generation keeps the lines it earned, and a
+launcher stitches runs by letting later lines for the same step overwrite
+earlier ones (exactly the rollback-replay semantics). Ends with
+`WORKER_TIMING steps=<n> seconds=<s>` and a final
+`WORKER_DONE step=<n> phase=<p> density=<d> preempted=<0|1> rollbacks=<r>`.
+
+--skip-window G:D builds the divergence-rollback *reference* data stream:
+data index = step for step < G, step + (D - G + 1) for step >= G — the
+sequence a healed run settles on after rolling back to G and skipping the
+poisoned window [G, D].
 """
 from __future__ import annotations
 
@@ -27,9 +41,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pid", type=int, required=True)
-    ap.add_argument("--nproc", type=int, required=True)
-    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--pid", type=int, default=None)
+    ap.add_argument("--nproc", type=int, default=None)
+    ap.add_argument("--port", type=int, default=None)
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--target-step", type=int, required=True)
     ap.add_argument("--batch", type=int, default=4)
@@ -37,13 +51,19 @@ def main():
     ap.add_argument("--steps-per-epoch", type=int, default=4)
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--heartbeat-interval", type=float, default=0.5)
+    ap.add_argument("--skip-window", default=None, metavar="G:D",
+                    help="reference-run data stream for a rollback that "
+                         "skipped window [G, D]")
     args = ap.parse_args()
 
     from repro.distributed import runtime
-    runtime.initialize(f"localhost:{args.port}", args.nproc, args.pid)
+    coordinator = f"localhost:{args.port}" if args.port is not None else None
+    runtime.initialize(coordinator, args.nproc, args.pid)
 
     from repro.configs import get_config
     from repro.configs.base import SpionConfig
+    from repro.distributed.fault import DivergenceSentinel
     from repro.launch.mesh import make_distributed_mesh
     from repro.launch.train import Trainer
 
@@ -66,10 +86,30 @@ def main():
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
 
+    if args.skip_window:
+        g, d = (int(v) for v in args.skip_window.split(":"))
+        base_fn, shift = data_fn, d - g + 1
+
+        def data_fn(step):  # noqa: F811 - deliberate reference-stream wrap
+            return base_fn(step if step < g else step + shift)
+
+    def on_step(step, loss):
+        # LIVE per-step loss: a killed/hung generation keeps the lines it
+        # already earned; replayed steps print again and the launcher's
+        # dict-stitching keeps the last occurrence
+        if runtime.is_coordinator():
+            print(f"LOSS,{step},{loss:.8f}", flush=True)
+
     mesh = make_distributed_mesh()
     tr = Trainer(cfg, seq_len=S, batch=B, lr=1e-3,
                  steps_per_epoch=args.steps_per_epoch,
-                 ckpt_dir=args.ckpt_dir, mesh=mesh, data_fn=data_fn)
+                 ckpt_dir=args.ckpt_dir, mesh=mesh, data_fn=data_fn,
+                 heartbeat_interval=args.heartbeat_interval,
+                 # NaN/inf detection only: the chaos tests poison params
+                 # deterministically, and the tiny-model loss curve is too
+                 # jumpy for a meaningful spike threshold at this scale
+                 sentinel=DivergenceSentinel(spike=False),
+                 step_callback=on_step)
     tr.install_preemption_handler()
     tr.maybe_resume()
     start = tr.step
@@ -79,14 +119,13 @@ def main():
                       log=lambda *a, **k: None)
     dt = time.time() - t0
     if runtime.is_coordinator():
-        for i, l in enumerate(losses):
-            print(f"LOSS,{start + i},{l:.8f}")
         # wall clock over the whole loop (jit compile included) — the
         # faultrecovery bench compares legs run under the same harness
         print(f"WORKER_TIMING steps={len(losses)} seconds={dt:.3f}")
     print(f"WORKER_DONE step={tr.step} phase={tr.spion_state.phase} "
           f"density={tr.spion_state.density} "
-          f"preempted={int(tr.preempted)}", flush=True)
+          f"preempted={int(tr.preempted)} rollbacks={tr.rollback_count}",
+          flush=True)
 
 
 if __name__ == "__main__":

@@ -254,3 +254,117 @@ def test_sigterm_preemption_saves_fleetwide(tmp_path):
     for _, out, _ in outs:
         assert "WORKER_DONE step=12" in out and "preempted=1" in out
     assert _committed_steps(ckpt_dir)[-1] == 12
+
+
+# -- self-healing: supervisor + divergence rollback (DESIGN.md §13) ------------
+
+def _run_supervised(ckpt_dir, once_dir, target_step, chaos_env, *,
+                    hang_timeout=120, max_respawns=3, timeout=600):
+    """Run `python -m repro.launch.supervise` over 2 mp_train_worker
+    processes with the given chaos arming; returns (rc, stdout+stderr)."""
+    env = {"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+           "PATH": "/usr/bin:/bin", "SPION_CHAOS_ONCE_DIR": once_dir,
+           **chaos_env}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.supervise",
+         "--nproc", "2", "--ckpt-dir", ckpt_dir,
+         "--dead-timeout", "60", "--hang-timeout", str(hang_timeout),
+         "--poll-interval", "0.5", "--max-respawns", str(max_respawns),
+         "--backoff-base", "0.2", "--backoff-max", "1.0",
+         "--", sys.executable, "tests/mp_train_worker.py",
+         "--ckpt-dir", ckpt_dir, "--target-step", str(target_step),
+         "--heartbeat-interval", "0.3"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=ROOT, timeout=timeout)
+    return r.returncode, r.stdout
+
+
+def _reference_losses(tmp_path, target_step, skip_window=None):
+    ref_dir = str(tmp_path / "ref")
+    extra = (["--skip-window", skip_window] if skip_window else [])
+    procs = []
+    port = free_port()
+    for pid in range(2):
+        procs.append(subprocess.Popen(
+            [sys.executable, "tests/mp_train_worker.py",
+             "--pid", str(pid), "--nproc", "2", "--port", str(port),
+             "--ckpt-dir", ref_dir, "--target-step", str(target_step)] + extra,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+                 "PATH": "/usr/bin:/bin"}, cwd=ROOT))
+    outs = _drain(procs)
+    assert all(rc == 0 for rc, _, _ in outs), outs[0][2][-2000:]
+    ref = _losses(outs[0][1])
+    assert sorted(ref) == list(range(target_step))
+    return ref
+
+
+def _assert_stitched(got, ref, steps):
+    assert sorted(got) == list(range(steps)), sorted(got)
+    for s in range(steps):
+        assert abs(got[s] - ref[s]) <= 1e-3 + 1e-3 * abs(ref[s]), \
+            (s, got[s], ref[s])
+
+
+def test_supervisor_heals_kill_end_to_end(tmp_path):
+    """kill -9 on worker 1 at step 12: the supervisor notices the non-zero
+    exit, SIGKILLs the wedged survivor, respawns the fleet, and the respawn
+    resumes from the last committed checkpoint and reaches the target with
+    reference-matching losses — zero manual intervention."""
+    ref = _reference_losses(tmp_path, 16)
+    ckpt_dir = str(tmp_path / "kill")
+    rc, out = _run_supervised(
+        ckpt_dir, str(tmp_path / "once_kill"), 16,
+        {"SPION_CHAOS_KILL_STEP": "12", "SPION_CHAOS_KILL_PROC": "1",
+         "SPION_CHAOS_SIGNAL": "KILL"})
+    assert rc == 0, out[-4000:]
+    assert "SUPERVISOR fault gen=0" in out and "exit=-9" in out
+    assert "SUPERVISOR respawn gen=1" in out
+    assert "SUPERVISOR done" in out
+    assert "WORKER_DONE step=16" in out
+    _assert_stitched(_losses(out), ref, 16)
+
+
+def test_supervisor_heals_hang_end_to_end(tmp_path):
+    """Chaos hang at step 12 (both workers sleep inside the loop): the beat
+    threads keep ts fresh, so only the step-progress watchdog can see it.
+    The supervisor declares the fleet hung, kills and respawns it; the
+    once-marker stops the replay from re-hanging."""
+    ref = _reference_losses(tmp_path, 16)
+    ckpt_dir = str(tmp_path / "hang")
+    rc, out = _run_supervised(
+        ckpt_dir, str(tmp_path / "once_hang"), 16,
+        {"SPION_CHAOS_HANG_STEP": "12"},
+        hang_timeout=120, timeout=600)
+    assert rc == 0, out[-4000:]
+    assert "hung" in out and "SUPERVISOR fault gen=0" in out
+    assert "SUPERVISOR done" in out
+    assert "WORKER_DONE step=16" in out
+    _assert_stitched(_losses(out), ref, 16)
+
+
+def test_divergence_rollback_fleetwide(tmp_path):
+    """NaN-poisoned params on ONE process at step 14: the global-mean loss
+    carries the poison to every process, the OR'd sentinel flag rolls the
+    whole fleet back to the pinned good step 10 at the same step, the
+    poisoned step-15 save is quarantined, the data window [10, 14] is
+    skipped, and the run completes unattended with losses matching a
+    reference that pre-skips the window."""
+    ref = _reference_losses(tmp_path, 18, skip_window="10:14")
+    ckpt_dir = str(tmp_path / "nan")
+    procs = _launch_workers(
+        2, free_port(), ckpt_dir, 18,
+        chaos={"SPION_CHAOS_NAN_STEP": "14", "SPION_CHAOS_NAN_PROC": "1",
+               "SPION_CHAOS_ONCE_DIR": str(tmp_path / "once_nan")},
+        chaos_pid=1)
+    outs = _drain(procs)
+    assert all(rc == 0 for rc, _, _ in outs), outs[1][2][-3000:]
+    for _, out, _ in outs:
+        assert "WORKER_DONE step=18" in out and "rollbacks=1" in out
+    assert "SPION_EVENT" in outs[0][1]
+    assert '"event": "rollback"' in outs[0][1]
+    # the poisoned post-divergence save was moved aside, then the healthy
+    # replay re-committed step 15 under the canonical name
+    assert os.path.isdir(os.path.join(ckpt_dir, "quarantined_step_000000015"))
+    assert 15 in _committed_steps(ckpt_dir)
+    _assert_stitched(_losses(outs[0][1]), ref, 18)

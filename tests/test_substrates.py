@@ -273,8 +273,183 @@ def test_heartbeat_zero_timestamp(tmp_path):
     p = str(tmp_path / "h")
     hb = Heartbeat(p, interval=0.0)
     hb.beat(now=0.0)
-    with open(p) as f:
-        assert float(f.read()) == 0.0
+    assert Heartbeat.read(p)["ts"] == 0.0
     # a host last seen at t=0 evaluated at now=0 is alive, not 50-years dead
     assert Heartbeat.dead_hosts([p], timeout=5.0, now=0.0) == []
     assert Heartbeat.dead_hosts([p], timeout=5.0, now=6.0) == [p]
+
+
+def test_heartbeat_json_payload_and_legacy(tmp_path):
+    """beat() writes a JSON payload {ts, pid, step, phase, ...}; read()
+    parses it and still accepts the pre-JSON bare-timestamp format, so a
+    supervisor scanning a mixed-version fleet sees every host."""
+    p = str(tmp_path / "h")
+    hb = Heartbeat(p, interval=0.0)
+    hb.beat(now=100.0, step=7, phase="sparse", extra={"stragglers": 2})
+    got = Heartbeat.read(p)
+    assert got["ts"] == 100.0 and got["step"] == 7
+    assert got["phase"] == "sparse" and got["stragglers"] == 2
+    assert got["pid"] == os.getpid()
+    # payload fields persist across beats that don't re-supply them
+    hb.beat(now=200.0)
+    assert Heartbeat.read(p)["step"] == 7
+    # legacy format: a bare float timestamp
+    legacy = str(tmp_path / "old")
+    with open(legacy, "w") as f:
+        f.write("1234.5")
+    assert Heartbeat.read(legacy) == {"ts": 1234.5}
+    assert Heartbeat.dead_hosts([legacy], timeout=10.0, now=1240.0) == []
+    assert Heartbeat.dead_hosts([legacy], timeout=1.0, now=1240.0) == [legacy]
+    # missing / unparseable files read as None and count as dead
+    assert Heartbeat.read(str(tmp_path / "missing")) is None
+    garbled = str(tmp_path / "bad")
+    with open(garbled, "w") as f:
+        f.write("{not json")
+    assert Heartbeat.read(garbled) is None
+    assert Heartbeat.dead_hosts([garbled], timeout=10.0, now=20.0) == [garbled]
+
+
+def test_heartbeat_thread_keeps_ts_fresh(tmp_path):
+    """The daemon beat thread refreshes ts while the 'main thread' (this
+    test) never calls beat() — the property that makes a hung step
+    detectable as fresh-ts/frozen-step rather than dead."""
+    import time as _time
+    p = str(tmp_path / "h")
+    hb = Heartbeat(p, interval=0.05)
+    hb.beat(step=3)
+    hb.start_thread()
+    try:
+        deadline = _time.time() + 5.0
+        first = Heartbeat.read(p)["ts"]
+        while _time.time() < deadline:
+            got = Heartbeat.read(p)
+            if got["ts"] > first:
+                assert got["step"] == 3  # payload rides every pulse
+                break
+            _time.sleep(0.02)
+        else:
+            raise AssertionError("beat thread never refreshed ts")
+    finally:
+        hb.stop_thread()
+
+
+# -- checkpoint pinning / quarantine (divergence rollback support) -------------
+
+def test_checkpoint_gc_never_removes_pinned_step(tmp_path):
+    """A pinned step (the rollback target) survives however far training
+    runs past the keep window; unpinning re-exposes it to the next GC."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(1, _tree())
+    mgr.pin(1)
+    for s in (2, 3, 4, 5):
+        mgr.save(s, _tree())
+    assert mgr.all_steps() == [1, 4, 5]  # 1 outlives keep=2 only via the pin
+    assert mgr.pinned() == [1]
+    mgr.unpin(1)
+    mgr.save(6, _tree())  # next GC reclaims the unpinned step
+    assert mgr.all_steps() == [5, 6]
+
+
+def test_checkpoint_reap_orphans_skips_pinned(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _tree())
+    pinned = tmp_path / ".tmp_step_000000007"
+    stray = tmp_path / ".tmp_step_000000008"
+    os.makedirs(pinned)
+    os.makedirs(stray)
+    mgr.pin(7)
+    mgr.save(2, _tree())  # save path runs _reap_orphans
+    assert pinned.exists() and not stray.exists()
+
+
+def test_checkpoint_quarantine_after(tmp_path):
+    """quarantine_after(g) hides every committed step > g from restore /
+    latest_step (poisoned post-divergence saves must never be resumed
+    from) while keeping the payload on disk for forensics."""
+    mgr = CheckpointManager(str(tmp_path), keep=0, async_save=False)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    mgr.quarantine_after(2)
+    assert mgr.all_steps() == [1, 2]
+    assert mgr.latest_step() == 2
+    got, step, _ = mgr.restore(target=tree)
+    assert step == 2
+    assert (tmp_path / "quarantined_step_000000003").exists()
+    assert (tmp_path / "quarantined_step_000000004").exists()
+    # idempotent: re-quarantining (e.g. a second rollback to the same good
+    # step after more saves) must not trip over existing quarantine dirs
+    mgr.save(5, tree)
+    mgr.quarantine_after(2)
+    assert mgr.all_steps() == [1, 2]
+
+
+# -- chaos: hang + NaN-poison arms --------------------------------------------
+
+def test_chaos_hang_and_nan_arming(monkeypatch):
+    from repro.distributed.chaos import ChaosMonkey
+    monkeypatch.setenv("SPION_CHAOS_HANG_STEP", "12")
+    monkeypatch.setenv("SPION_CHAOS_HANG_SECONDS", "7.5")
+    monkeypatch.setenv("SPION_CHAOS_NAN_STEP", "13")
+    cm = ChaosMonkey.from_env()
+    assert cm.hang_step == 12 and cm.hang_seconds == 7.5 and cm.nan_step == 13
+    slept = []
+    cm.maybe_hang(11, sleep_fn=slept.append)
+    assert slept == []
+    cm.maybe_hang(12, sleep_fn=slept.append)
+    assert slept == [7.5]
+    cm.maybe_hang(12, sleep_fn=slept.append)
+    assert slept == [7.5]  # one shot
+    assert not cm.poison_due(12)
+    assert cm.poison_due(13)
+    assert not cm.poison_due(14)  # one shot
+
+
+def test_chaos_once_markers_survive_respawn(tmp_path, monkeypatch):
+    """once_dir markers make each injection at-most-once across process
+    incarnations: a supervisor-respawned fleet replaying through the armed
+    step must NOT re-trigger the fault (that would crash-loop forever)."""
+    from repro.distributed.chaos import ChaosMonkey
+    once = str(tmp_path / "once")
+
+    def fresh():
+        return ChaosMonkey(hang_step=5, nan_step=6, kill_step=7,
+                           once_dir=once)
+
+    cm = fresh()
+    slept = []
+    cm.maybe_hang(5, sleep_fn=slept.append)
+    assert slept and os.path.exists(os.path.join(once, "chaos_fired_hang"))
+    assert cm.poison_due(6)
+    assert cm.armed_for(7)
+    cm._mark("kill")  # maybe_kill would SIGKILL us; mark like it does
+    # "respawned" incarnation: fresh in-memory state, same once_dir
+    cm2 = fresh()
+    slept2 = []
+    cm2.maybe_hang(5, sleep_fn=slept2.append)
+    assert slept2 == []
+    assert not cm2.poison_due(6)
+    assert not cm2.armed_for(7)
+
+
+# -- divergence sentinel -------------------------------------------------------
+
+def test_sentinel_flags_nonfinite():
+    from repro.distributed.fault import DivergenceSentinel
+    s = DivergenceSentinel(spike=False)
+    assert not s.observe(2.0)
+    assert s.observe(float("nan"))
+    assert s.observe(float("inf"))
+    assert s.observe(float("-inf"))
+    assert not s.observe(3.0)  # recovers: verdicts are per-observation
+
+
+def test_sentinel_flags_loss_spike_and_resets():
+    from repro.distributed.fault import DivergenceSentinel
+    s = DivergenceSentinel(z=6.0, warmup=5)
+    for i in range(20):
+        assert not s.observe(4.0 - 0.01 * i)  # healthy decreasing loss
+    assert s.observe(400.0)  # explosion
+    s.reset()
+    for _ in range(5):
+        assert not s.observe(400.0)  # post-rollback warmup: new baseline
