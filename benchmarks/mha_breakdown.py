@@ -557,3 +557,68 @@ def serve_rows(out, smoke=False):
             f"speedup={td / ts:.2f}x K*block={width * block} of {S}")
     out("serve.decode_sparse_speedup_4k", round(speedups[4096], 2),
         f"vs {speedups[1024]:.2f}x at 1k — the win grows with S_cache")
+
+    # (c) the paged-cache claim (DESIGN.md §14): decode throughput paged vs
+    # contiguous at matched slot counts, pool-vs-contiguous memory at 64
+    # slots (the paged pool sizes to the WORST-CASE PAGE BUDGET of the
+    # actual requests, not slots*max_len — that accounting gap is what lets
+    # the paged engine run 64 concurrent slots where a contiguous cache
+    # would allocate the full rectangle), and prefix-sharing telemetry on a
+    # shared-system-prompt workload.
+    P2, new2, SL = 16, 8, 256
+
+    def engine_decode_tok_s(paged, slots, **kw):
+        e = ServeEngine(cfg, params, slots=slots, max_len=SL, paged=paged,
+                        **kw)
+        rs = [Request(rid=i,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          P2).astype(np.int32),
+                      max_new=new2) for i in range(slots)]
+        for r in rs:
+            e.submit(r)
+        e.step()                      # admit-all + first tick (compile)
+        n0 = sum(len(r.out) for r in rs)
+        t0 = time.perf_counter()
+        e.run([])
+        dt = time.perf_counter() - t0
+        return (sum(len(r.out) for r in rs) - n0) / max(dt, 1e-9), e
+
+    tp16p, ep16 = engine_decode_tok_s(True, 16)
+    tp16c, _ = engine_decode_tok_s(False, 16)
+    out("serve.contig_decode_tok_s_16", round(tp16c, 1),
+        f"16 slots, P={P2}, max_new={new2}")
+    out("serve.paged_decode_tok_s_16", round(tp16p, 1),
+        f"ratio={tp16p / max(tp16c, 1e-9):.2f}x vs contiguous, "
+        f"page={ep16.page}")
+    budget64 = 64 * -(-(P2 + new2) // ep16.page) + 1   # worst case + scratch
+    tp64, e64 = engine_decode_tok_s(True, 64, num_pages=budget64)
+    pool_b = e64.pool.nbytes
+    # the contiguous rectangle the same 64 slots would have to allocate
+    cdt = jnp.dtype(cfg.cache_dtype or cfg.dtype)
+    contig_b = (2 * cfg.num_layers * 64 * SL * cfg.num_kv_heads
+                * cfg.resolved_head_dim * cdt.itemsize)
+    out("serve.paged_decode_tok_s_64", round(tp64, 1),
+        f"64 slots from a {budget64}-page pool "
+        f"({budget64 * ep16.page} positions vs contiguous {64 * SL})")
+    out("serve.paged_pool_mib_64", round(pool_b / 2**20, 3),
+        f"{budget64} pages x {ep16.page}")
+    out("serve.contig_cache_mib_64", round(contig_b / 2**20, 3),
+        f"64 slots x max_len={SL} rectangle")
+    out("serve.paged_mem_ratio_64", round(contig_b / pool_b, 2),
+        "contiguous bytes / pool bytes at 64 slots")
+
+    # shared system prompt: 3 requests, 64-token common prefix
+    sys_p = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    esh = ServeEngine(cfg, params, slots=2, max_len=SL, paged=True)
+    share = [Request(rid=i,
+                     prompt=np.concatenate(
+                         [sys_p, rng.integers(0, cfg.vocab_size,
+                                              5).astype(np.int32)]),
+                     max_new=4) for i in range(3)]
+    esh.run(share)
+    st = esh.prefix_stats
+    out("serve.prefix_hit_rate", round(st["prefix_hit_rate"], 3),
+        f"{st['hits']}/{st['lookups']} page lookups hit; "
+        f"{st['prefix_tokens_reused']} prompt tokens reused")
+    out("serve.prefix_prefill_fused_calls", st["prefill_fused"],
+        "3 shared-prefix requests -> the prefix prefilled once")

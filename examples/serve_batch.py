@@ -2,7 +2,9 @@
 more requests than it has cache slots — fused prefill straight into slots,
 one batched decode per tick at per-slot positions, admission mid-decode —
 then the same batch served SPARSELY from a SPION-style plan (decode gathers
-only the pattern-listed KV-cache blocks).
+only the pattern-listed KV-cache blocks), then the paged-cache payoff: a
+SHARED SYSTEM PROMPT prefilled once and copy-on-write-mapped into every
+later request (DESIGN.md §14).
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -59,6 +61,28 @@ def main():
           "random bf16 weights once one near-tie flips):")
     serve(ServeEngine(cfg, params, slots=slots, max_len=max_len, spion=tabs),
           make_requests(cfg, np.random.default_rng(0), 6), "sparse decode")
+
+    # paged cache + COW prefix sharing: every request carries the same
+    # 32-token system prompt; the engine prefills it ONCE, later requests
+    # incref the same physical pages and only their private suffix is
+    # computed (an exact repeat reuses the cached first token outright)
+    print("shared system prompt across 5 requests (paged cache, COW):")
+    sys_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(2, 6))).astype(np.int32)]),
+                    max_new=12) for i in range(5)]
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                      page_size=8)        # 32-token prefix = 4 shared pages
+    serve(eng, reqs, "paged + shared prefix")
+    st = eng.prefix_stats
+    print(f"  prefix hit rate {st['prefix_hit_rate']:.2f} "
+          f"({st['hits']}/{st['lookups']} page lookups), "
+          f"{st['prefill_fused']} fused prefill(s) for 5 requests, "
+          f"{st['prefix_tokens_reused']} prompt tokens reused, "
+          f"{st['forks']} COW fork(s)")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.sparse_attention import (BCSR, PLAN_TABLE_KEYS,
                                          bcsr_attention,
+                                         paged_sparse_decode_attention,
                                          sparse_decode_attention)
 
 _PHASES = ("train", "prefill", "decode")
@@ -211,6 +212,29 @@ class SparseAttentionExec:
                    ring=False):
         return self.decode(cfg, q, k_cache, v_cache, pos, self.layer(app_idx),
                            ring=ring)
+
+    def decode_paged(self, cfg, q, kp, vp, layer, pos, page_table,
+                     layer_tables, *, ring=False):
+        """`decode` over a paged KV pool (core.kv_pool.PagedKVCache): the
+        pattern's column blocks resolve through the request's page-table
+        row, so the O(K*block) cache gather is pure page indirection. The
+        pool's page size must equal the plan block — the alignment that
+        makes pattern block ids and page-table coordinates the same thing.
+        kp/vp are the (L, num_pages, block, KV, hd) pool arrays, `layer`
+        the traced pool layer index, page_table (B, NB)."""
+        if kp.shape[2] != self.block:
+            raise ValueError(
+                f"paged decode: pool page size {kp.shape[2]} != plan block "
+                f"{self.block}; build the pool with page == block")
+        return paged_sparse_decode_attention(
+            cfg, q, kp, vp, layer, pos, page_table,
+            layer_tables["col_idx"], layer_tables["nvalid"],
+            page=self.block, ring=ring)
+
+    def decode_paged_app(self, cfg, q, kp, vp, app_idx, pos, page_table, *,
+                         ring=False):
+        return self.decode_paged(cfg, q, kp, vp, app_idx, pos, page_table,
+                                 self.layer(app_idx), ring=ring)
 
     # -- introspection --------------------------------------------------------
 

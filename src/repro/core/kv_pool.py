@@ -1,0 +1,414 @@
+"""Paged KV cache: a shared page pool + per-request page tables (DESIGN.md §14).
+
+The serve engine's PR 5 caches were per-slot contiguous `max_len` strips, so
+slot count was capped by worst-case memory and the decode floor was the layer
+scan's full cache write-out (each tick rewrote every slot's whole strip
+through the scan ys). This module replaces the representation:
+
+  - `PagePool` owns ONE device pool of K/V pages shaped
+    (layers, num_pages, page, kv_heads, head_dim) — a page is a cross-layer
+    group, so a single (B, num_blocks) page table serves every layer of the
+    scan — plus the host-side bookkeeping: a free list, per-page refcounts,
+    and a chained-hash prefix registry for copy-on-write prompt sharing.
+  - `PagedKVCache` is the traced view a decode step consumes: the pool's
+    k/v arrays and a page table, registered as a pytree (arrays traced, page
+    geometry static) so it rides `jax.jit` with donation like the old dict
+    cache did.
+  - decode writes become an O(B) scatter into the active page
+    (`scatter_token`), carried through the layer scan as CARRY instead of
+    scanned ys — the full cache write-out disappears.
+
+Page size equals the BCSR block when serving sparsely, so the sparse decode
+gather (core.sparse_attention.paged_sparse_decode_attention) is pure page
+indirection: pattern column block -> page table -> physical page.
+
+Page 0 is reserved scratch: it is never allocated, unmapped page-table
+entries (-1) clamp to it, and idle serve slots park their per-tick writes
+there. Reads through unmapped entries are position-masked, so scratch junk
+never reaches a logit.
+
+Prefix sharing (copy-on-write): full prompt pages are content-addressed by a
+chained digest (digest_i = H(digest_{i-1} || tokens of page i) — causal K/V
+at position p depends only on tokens <= p, so equal chains mean bitwise-equal
+pages). A later request whose chain prefix matches maps the same physical
+pages (incref; never written — decode writes start past the prompt). A
+partial tail page is FORKED: the registry keeps (parent digest, token tuple)
+per registered page, a prefix match copies the page device-side, and the
+request's first divergent token lands in its private copy. Refcounts hitting
+zero move registered pages to an evictable LRU (future prefix hits revive
+them) and return unregistered ones to the free list.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCRATCH_PAGE = 0
+_ROOT = b"spion-kv-pool-root"
+ROOT_DIGEST = _ROOT   # chain parent of a prompt's first page (engine-visible)
+
+
+# ---------------------------------------------------------------------------
+# traced cache view
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class PagedKVCache:
+    """The decode-step view of a paged pool: k/v page arrays
+    (L, num_pages, page, KV, hd) + a page table (B, num_blocks) of physical
+    page ids (-1 = unmapped). Arrays are traced pytree children; the page
+    size is static aux, so jit keys the trace on pool geometry exactly like
+    SparseAttentionExec keys on block/halo."""
+
+    def __init__(self, kp, vp, pt, *, page: int):
+        self.kp = kp
+        self.vp = vp
+        self.pt = pt
+        self.page = int(page)
+
+    def tree_flatten(self):
+        return (self.kp, self.vp, self.pt), (self.page,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kp, vp, pt = children
+        ex = cls.__new__(cls)
+        ex.kp, ex.vp, ex.pt = kp, vp, pt
+        ex.page = aux[0]
+        return ex
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.pt.shape[1])
+
+    @property
+    def seq_capacity(self) -> int:
+        """Positions one page table row can address (num_blocks * page)."""
+        return self.num_blocks * self.page
+
+    def __repr__(self):
+        return (f"PagedKVCache(page={self.page}, pool={tuple(self.kp.shape)}, "
+                f"pt={tuple(self.pt.shape)})")
+
+
+def write_target(pt, posb, page: int, *, ring: bool):
+    """Physical page + in-page offset each batch row writes its new token to.
+
+    pt (B, NB) page table; posb (B,) absolute positions. Append caches use
+    block pos//page; sliding-window rings reuse table slot (pos//page) % NB —
+    page `page` divides the ring length NB*page, so the ring storage slot
+    pos % S lands in table slot (pos//page) % NB at offset pos % page, and
+    rotated-out positions recycle the same physical pages in place. Unmapped
+    entries (idle slots, reclaimed rows) clamp to the scratch page."""
+    NB = pt.shape[1]
+    lb = (posb // page) % NB if ring else jnp.clip(posb // page, 0, NB - 1)
+    praw = jnp.take_along_axis(pt, lb[:, None], axis=1)[:, 0]
+    return jnp.maximum(praw, SCRATCH_PAGE), posb % page
+
+
+def scatter_token(kp, vp, layer, k_new, v_new, phys, off):
+    """In-place (donation-friendly) write of one decoded token's K/V into
+    layer `layer`'s active pages: kp/vp (L, NP, page, KV, hd), k_new/v_new
+    (B, 1, KV, hd), phys/off (B,). This is the paged replacement for
+    models.attention.update_cache's vector form — O(B) rows touched instead
+    of the layer scan rewriting every slot's whole strip through its ys."""
+    kp = kp.at[layer, phys, off].set(k_new[:, 0].astype(kp.dtype))
+    vp = vp.at[layer, phys, off].set(v_new[:, 0].astype(vp.dtype))
+    return kp, vp
+
+
+# ---------------------------------------------------------------------------
+# jitted pool maintenance (donated: updates alias in place on device)
+# ---------------------------------------------------------------------------
+
+def _copy_page_impl(kp, vp, src, dst):
+    kp = kp.at[:, dst].set(kp[:, src])
+    vp = vp.at[:, dst].set(vp[:, src])
+    return kp, vp
+
+
+_copy_page = jax.jit(_copy_page_impl, donate_argnums=(0, 1))
+
+
+def _insert_blocks_impl(kp, vp, ks, vs, phys, first_block):
+    """Write prefill K/V stacks (L, 1, Sp, KV, hd) into pages: page-sized
+    block j of the prompt (j in [first_block, first_block + len(phys))) goes
+    to physical page phys[j - first_block]. Sp must be a multiple of the
+    page size (the engine buckets prompts to page multiples)."""
+    L, NP, pg, KV, hd = kp.shape
+    Sp = ks.shape[2]
+    nb = phys.shape[0]
+    kb = ks[:, 0].reshape(L, Sp // pg, pg, KV, hd)
+    vb = vs[:, 0].reshape(L, Sp // pg, pg, KV, hd)
+    ksel = jax.lax.dynamic_slice_in_dim(kb, first_block, nb, axis=1)
+    vsel = jax.lax.dynamic_slice_in_dim(vb, first_block, nb, axis=1)
+    kp = kp.at[:, phys].set(ksel.astype(kp.dtype))
+    vp = vp.at[:, phys].set(vsel.astype(vp.dtype))
+    return kp, vp
+
+
+_insert_blocks = jax.jit(_insert_blocks_impl, donate_argnums=(0, 1))
+
+
+def _insert_ring_impl(kp, vp, ks, vs, phys, plen):
+    """Ring-layout insert for a prompt that wraps (plen >= len(phys)*page):
+    ring table slot s holds, for each position in its page, the LATEST
+    prompt position congruent to it mod the ring length — the same layout
+    `write_target(ring=True)` produces at decode time."""
+    L, NP, pg, KV, hd = kp.shape
+    Sp = ks.shape[2]
+    NB = phys.shape[0]
+    S = NB * pg
+    s = jnp.arange(S)
+    p = s + ((plen - 1 - s) // S) * S
+    pc = jnp.clip(p, 0, Sp - 1)
+    knew = jnp.take(ks[:, 0], pc, axis=1).reshape(L, NB, pg, KV, hd)
+    vnew = jnp.take(vs[:, 0], pc, axis=1).reshape(L, NB, pg, KV, hd)
+    kp = kp.at[:, phys].set(knew.astype(kp.dtype))
+    vp = vp.at[:, phys].set(vnew.astype(vp.dtype))
+    return kp, vp
+
+
+_insert_ring = jax.jit(_insert_ring_impl, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# prefix hashing
+# ---------------------------------------------------------------------------
+
+def _digest(parent: bytes, toks) -> bytes:
+    body = np.ascontiguousarray(np.asarray(toks, np.int32)).tobytes()
+    return hashlib.blake2b(parent + body, digest_size=16).digest()
+
+
+def chain_digests(prompt: np.ndarray, page: int) -> Tuple[List[bytes], bytes]:
+    """(per-full-page chain digests, full-prompt digest). The chain makes a
+    page digest cover every token before it, which is exactly what causal
+    K/V content depends on."""
+    prompt = np.asarray(prompt, np.int32)
+    nfull = len(prompt) // page
+    digests, parent = [], _ROOT
+    for i in range(nfull):
+        parent = _digest(parent, prompt[i * page:(i + 1) * page])
+        digests.append(parent)
+    tail = prompt[nfull * page:]
+    full = _digest(parent, tail) if len(tail) else parent
+    return digests, full
+
+
+class PrefixMatch(NamedTuple):
+    shared: List[int]            # physical page per prompt block 0..n-1
+    digests: List[bytes]         # chain digest per FULL prompt page
+    full_digest: bytes           # digest over the entire prompt
+    tail_src: Optional[int]      # fork source for a partial tail page
+    first_tok: Optional[int]     # cached first generated token (full hit)
+
+
+# ---------------------------------------------------------------------------
+# the pool
+# ---------------------------------------------------------------------------
+
+class PagePool:
+    """Device page arrays + host allocator. Pages are refcounted; registered
+    (content-addressed) pages at refcount 0 sit in an eviction LRU instead of
+    the free list, so a hot system prompt survives its requests. Page 0 is
+    reserved scratch and never allocated."""
+
+    def __init__(self, *, layers: int, num_pages: int, page: int,
+                 kv_heads: int, head_dim: int, dtype="bfloat16"):
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is scratch)")
+        if page < 1:
+            raise ValueError("page size must be >= 1")
+        self.layers = int(layers)
+        self.num_pages = int(num_pages)
+        self.page = int(page)
+        self.kv_heads = int(kv_heads)
+        self.head_dim = int(head_dim)
+        self.dtype = jnp.dtype(dtype)
+        shape = (self.layers, self.num_pages, self.page, self.kv_heads,
+                 self.head_dim)
+        self.kp = jnp.zeros(shape, self.dtype)
+        self.vp = jnp.zeros(shape, self.dtype)
+
+        self.rc = np.zeros(self.num_pages, np.int64)
+        self.free: collections.deque = collections.deque(
+            range(1, self.num_pages))
+        self.lru: "collections.OrderedDict[int, None]" = collections.OrderedDict()
+        self.by_hash = {}     # chain digest -> physical page (full pages)
+        self.meta = {}        # page -> (digest, parent, token tuple, is_full)
+        self.by_parent = {}   # parent digest -> [pages] (fork candidates)
+        self.first_tok = {}   # full-prompt digest -> first generated token
+        self.stats = {"lookups": 0, "hits": 0, "forks": 0, "evictions": 0,
+                      "allocs": 0, "prefix_tokens_reused": 0,
+                      "prefill_reused": 0}
+
+    # -- accounting -----------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (everything but scratch)."""
+        return self.num_pages - 1
+
+    @property
+    def nbytes(self) -> int:
+        return 2 * int(np.prod(self.kp.shape)) * self.dtype.itemsize
+
+    def available(self) -> int:
+        """Pages an alloc() can produce right now: free + evictable LRU."""
+        return len(self.free) + len(self.lru)
+
+    def live_pages(self) -> int:
+        return int(np.sum(self.rc > 0))
+
+    # -- alloc / refcount -----------------------------------------------------
+
+    def alloc(self, n: int) -> List[int]:
+        """Take n pages (refcount 1 each), evicting LRU-cached registered
+        pages as needed. Raises RuntimeError when the pool cannot satisfy
+        the request — callers gate on available()."""
+        if n > self.available():
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, available {self.available()} "
+                f"(capacity {self.capacity}, live {self.live_pages()})")
+        out = []
+        for _ in range(n):
+            if self.free:
+                pgid = self.free.popleft()
+            else:
+                pgid, _ = self.lru.popitem(last=False)
+                self._unregister(pgid)
+                self.stats["evictions"] += 1
+            assert self.rc[pgid] == 0
+            self.rc[pgid] = 1
+            out.append(pgid)
+        self.stats["allocs"] += n
+        return out
+
+    def incref(self, pgid: int):
+        if self.rc[pgid] == 0:
+            # revived from the LRU (registered page between users)
+            self.lru.pop(pgid, None)
+        self.rc[pgid] += 1
+
+    def decref(self, pgid: int):
+        assert self.rc[pgid] > 0, f"decref of dead page {pgid}"
+        self.rc[pgid] -= 1
+        if self.rc[pgid] == 0:
+            if pgid in self.meta:
+                self.lru[pgid] = None        # evictable, revivable
+            else:
+                self.free.append(pgid)
+
+    # -- prefix registry ------------------------------------------------------
+
+    def match_prefix(self, prompt: np.ndarray) -> PrefixMatch:
+        """Pure query (no refcount changes): which leading full pages of
+        `prompt` are already resident, the fork source for its partial tail
+        (a registered page whose token tuple extends the tail), and the
+        cached first token on a full-prompt hit."""
+        pg = self.page
+        prompt = np.asarray(prompt, np.int32)
+        digests, full = chain_digests(prompt, pg)
+        shared: List[int] = []
+        for d in digests:
+            pgid = self.by_hash.get(d)
+            if pgid is None:
+                break
+            shared.append(pgid)
+        self.stats["lookups"] += len(digests)
+        self.stats["hits"] += len(shared)
+        tail_src = None
+        first = None
+        if len(shared) == len(digests):
+            parent = digests[-1] if digests else _ROOT
+            tail = tuple(int(t) for t in prompt[len(digests) * pg:])
+            if tail:
+                for cand in self.by_parent.get(parent, []):
+                    ctoks = self.meta[cand][2]
+                    if len(ctoks) >= len(tail) and ctoks[:len(tail)] == tail:
+                        tail_src = cand
+                        break
+            first = self.first_tok.get(full)
+        return PrefixMatch(shared, digests, full, tail_src, first)
+
+    def register_full(self, pgid: int, digest: bytes, parent: bytes,
+                      tokens: Tuple[int, ...]):
+        """Content-address a full prompt page for future sharing."""
+        if digest in self.by_hash or pgid in self.meta:
+            return
+        self.meta[pgid] = (digest, parent, tuple(tokens), True)
+        self.by_hash[digest] = pgid
+        self.by_parent.setdefault(parent, []).append(pgid)
+
+    def register_tail(self, pgid: int, parent: bytes,
+                      tokens: Tuple[int, ...]):
+        """Register a PARTIAL tail page as a fork source only (never mapped
+        directly — positions past the prompt inside it belong to its owner's
+        generation and are read-masked in any fork)."""
+        if pgid in self.meta or not tokens:
+            return
+        digest = _digest(parent, np.asarray(tokens, np.int32))
+        self.meta[pgid] = (digest, parent, tuple(tokens), False)
+        self.by_parent.setdefault(parent, []).append(pgid)
+
+    def remember_first_token(self, full_digest: bytes, tok: int):
+        self.first_tok[full_digest] = int(tok)
+
+    def _unregister(self, pgid: int):
+        digest, parent, _toks, is_full = self.meta.pop(pgid)
+        if is_full:
+            self.by_hash.pop(digest, None)
+        sibs = self.by_parent.get(parent)
+        if sibs is not None:
+            try:
+                sibs.remove(pgid)
+            except ValueError:
+                pass
+            if not sibs:
+                del self.by_parent[parent]
+
+    # -- device-side ops ------------------------------------------------------
+
+    def copy_page(self, src: int, dst: int):
+        """COW fork: duplicate page `src` into already-allocated `dst`."""
+        self.kp, self.vp = _copy_page(self.kp, self.vp, jnp.int32(src),
+                                      jnp.int32(dst))
+        self.stats["forks"] += 1
+
+    def insert_blocks(self, ks, vs, phys, first_block: int):
+        self.kp, self.vp = _insert_blocks(
+            self.kp, self.vp, ks, vs, jnp.asarray(phys, jnp.int32),
+            jnp.int32(first_block))
+
+    def insert_ring(self, ks, vs, phys, plen: int):
+        self.kp, self.vp = _insert_ring(
+            self.kp, self.vp, ks, vs, jnp.asarray(phys, jnp.int32),
+            jnp.int32(plen))
+
+    def cache(self, pt) -> PagedKVCache:
+        """The traced view for one decode step over page table `pt`."""
+        return PagedKVCache(self.kp, self.vp, pt, page=self.page)
+
+    def absorb(self, cache: PagedKVCache):
+        """Take back the (donated, updated) pool arrays after a step."""
+        self.kp, self.vp = cache.kp, cache.vp
+
+    def gather_slot(self, row: np.ndarray, length: int) -> tuple:
+        """Host-side contiguous (L, length, KV, hd) K/V view of one page
+        table row — for tests/inspection, not the serving path."""
+        pg = self.page
+        nb = (length + pg - 1) // pg
+        phys = np.asarray(row[:nb], np.int32)
+        if np.any(phys < 0):
+            raise ValueError("gather_slot: unmapped page in requested range")
+        k = np.asarray(self.kp[:, phys]).reshape(self.layers, nb * pg,
+                                                 self.kv_heads, self.head_dim)
+        v = np.asarray(self.vp[:, phys]).reshape(self.layers, nb * pg,
+                                                 self.kv_heads, self.head_dim)
+        return k[:, :length], v[:, :length]

@@ -350,6 +350,70 @@ def _bcsr_rows(cfg, q, k, v, bcsr: BCSR, row_offset):
     return out.reshape(B, Sq, H, hd)
 
 
+def _decode_pattern_cols(pos, col_idx, nvalid, batch: int, block: int):
+    """Per-row pattern columns for one-token decode: the query position's
+    row-block selects its (K,) column blocks. Returns (posb (B,), colc (B,K)
+    clipped column-block ids, valid (B,K) table-validity mask). Rows past
+    the table clamp to the last row-block (serving callers size the plan to
+    cover the cache)."""
+    nrb, Kp = col_idx.shape
+    posb = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (batch,)) \
+        .astype(jnp.int32)
+    rb = jnp.clip(posb // block, 0, nrb - 1)
+    cols = col_idx[rb]                                    # (B, K)
+    nval = nvalid[rb]                                     # (B,)
+    valid = (jnp.arange(Kp)[None, :] < nval[:, None]) & (cols >= 0)
+    return posb, jnp.clip(cols, 0, None), valid
+
+
+def _decode_gathered(cfg, q, kg, vg, posb, colc, valid, *, block: int,
+                     ring_len=None):
+    """Attend q over gathered pattern blocks kg/vg (B, K, block, KV, hd)
+    with the Alg. 6 zero-corrected softmax. `colc`/`valid` are the logical
+    column-block ids and validity from `_decode_pattern_cols` (possibly
+    further masked by the caller — e.g. unmapped page-table entries);
+    `ring_len` is the ring-buffer length for sliding-window caches (None
+    for append caches). Shared by the contiguous and paged decode paths,
+    which therefore agree bitwise when they gather the same blocks."""
+    B, _, H, hd = q.shape
+    KV = kg.shape[3]
+    G = H // KV
+    Kp = colc.shape[1]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bcqkh->bkgcq", qg, kg).astype(jnp.float32) / np.sqrt(hd)
+    # absolute positions the gathered slots are *supposed* to hold
+    kpos = (colc * block)[:, :, None] + jnp.arange(block)[None, None, :]
+    ok = valid[:, :, None] & (kpos >= 0) & (kpos <= posb[:, None, None])
+    if cfg.sliding_window:
+        ok = ok & (kpos > posb[:, None, None] - cfg.sliding_window)
+    if ring_len is not None:
+        # the ring holds only the last ring_len positions; older ones were
+        # overwritten
+        ok = ok & (kpos > posb[:, None, None] - ring_len)
+    s = jnp.where(ok[:, None, None], s, -jnp.inf)
+    sflat = s.reshape(B, KV, G, Kp * block)
+    mx = jnp.maximum(jnp.max(sflat, axis=-1, keepdims=True), -1e30)
+    ex = jnp.where(jnp.isneginf(sflat), 0.0, jnp.exp(sflat - mx))
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    # Alg. 6 zero-correction: pruned visible positions count exp(-max) each
+    stored = jnp.sum(ok, axis=(1, 2)).astype(jnp.int32)   # (B,)
+    row_total = posb + 1
+    if cfg.sliding_window:
+        row_total = jnp.minimum(row_total, cfg.sliding_window)
+    if ring_len is not None:
+        # positions that rotated out of the ring are GONE, not pruned: the
+        # dense ring decode renormalises over what the cache holds, and a
+        # ring shorter than the window must match it, not the full-window
+        # prefill it can no longer represent
+        row_total = jnp.minimum(row_total, ring_len)
+    zeros_cnt = jnp.maximum(row_total - stored, 0)[:, None, None, None] \
+        .astype(jnp.float32)
+    denom = denom + zeros_cnt * jnp.exp(-mx)
+    probs = (ex / denom).astype(q.dtype).reshape(B, KV, G, Kp, block)
+    out = jnp.einsum("bkgcq,bcqkh->bkgh", probs, vg)
+    return out.reshape(B, 1, H, hd)
+
+
 def sparse_decode_attention(cfg, q, k_cache, v_cache, pos, col_idx, nvalid,
                             *, block: int, ring: bool = False):
     """One-token sparse decode: attend over ONLY the KV-cache blocks the
@@ -378,18 +442,10 @@ def sparse_decode_attention(cfg, q, k_cache, v_cache, pos, col_idx, nvalid,
     (launch/serve.ServeEngine enforces it). Decode is causal by
     construction (a cache never holds the future), so the row total is
     pos + 1 (clipped by the sliding window) regardless of cfg.causal."""
-    B, _, H, hd = q.shape
+    B, _, _H, hd = q.shape
     KV, S = k_cache.shape[2], k_cache.shape[1]
-    G = H // KV
     nbc = S // block
-    nrb, Kp = col_idx.shape
-    posb = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (B,)) \
-        .astype(jnp.int32)
-    rb = jnp.clip(posb // block, 0, nrb - 1)
-    cols = col_idx[rb]                                    # (B, K)
-    nval = nvalid[rb]                                     # (B,)
-    valid = (jnp.arange(Kp)[None, :] < nval[:, None]) & (cols >= 0)
-    colc = jnp.clip(cols, 0, None)
+    posb, colc, valid = _decode_pattern_cols(pos, col_idx, nvalid, B, block)
     if ring:
         sb = colc % nbc
     else:
@@ -401,38 +457,42 @@ def sparse_decode_attention(cfg, q, k_cache, v_cache, pos, col_idx, nvalid,
     idx = sb[:, :, None, None, None]
     kg = jnp.take_along_axis(kb, idx, axis=1).astype(q.dtype)  # (B,K,blk,KV,hd)
     vg = jnp.take_along_axis(vb, idx, axis=1).astype(q.dtype)
-    qg = q.reshape(B, KV, G, hd)
-    s = jnp.einsum("bkgh,bcqkh->bkgcq", qg, kg).astype(jnp.float32) / np.sqrt(hd)
-    # absolute positions the gathered slots are *supposed* to hold
-    kpos = (colc * block)[:, :, None] + jnp.arange(block)[None, None, :]
-    ok = valid[:, :, None] & (kpos >= 0) & (kpos <= posb[:, None, None])
-    if cfg.sliding_window:
-        ok = ok & (kpos > posb[:, None, None] - cfg.sliding_window)
+    return _decode_gathered(cfg, q, kg, vg, posb, colc, valid, block=block,
+                            ring_len=S if ring else None)
+
+
+def paged_sparse_decode_attention(cfg, q, kp, vp, layer, pos, page_table,
+                                  col_idx, nvalid, *, page: int,
+                                  ring: bool = False):
+    """`sparse_decode_attention` over a paged KV pool (core.kv_pool): the
+    pattern's column blocks resolve through the request's page-table row
+    instead of reshaping a contiguous per-slot cache — the O(K*block)
+    gather becomes pure page indirection.
+
+    q (B,1,H,hd); kp/vp (L, num_pages, page, KV, hd) with page == the BCSR
+    block; `layer` the (traced) pool layer index; page_table (B, NB) of
+    physical page ids, -1 = unmapped (masked — reads clamp to the scratch
+    page, whose finite junk contributes exactly 0 through the softmax).
+    ring=True recycles table slots mod NB exactly like the contiguous ring
+    recycles storage blocks, so rotated-out positions reuse the same
+    physical pages in place. Where every pattern-listed block is mapped the
+    result is bitwise-identical to the contiguous path (same gathered
+    values through the same `_decode_gathered` math — tested)."""
+    B = q.shape[0]
+    NB = page_table.shape[1]
+    posb, colc, valid = _decode_pattern_cols(pos, col_idx, nvalid, B, page)
     if ring:
-        # the ring holds only the last S positions; older ones were overwritten
-        ok = ok & (kpos > posb[:, None, None] - S)
-    s = jnp.where(ok[:, None, None], s, -jnp.inf)
-    sflat = s.reshape(B, KV, G, Kp * block)
-    mx = jnp.maximum(jnp.max(sflat, axis=-1, keepdims=True), -1e30)
-    ex = jnp.where(jnp.isneginf(sflat), 0.0, jnp.exp(sflat - mx))
-    denom = jnp.sum(ex, axis=-1, keepdims=True)
-    # Alg. 6 zero-correction: pruned visible positions count exp(-max) each
-    stored = jnp.sum(ok, axis=(1, 2)).astype(jnp.int32)   # (B,)
-    row_total = posb + 1
-    if cfg.sliding_window:
-        row_total = jnp.minimum(row_total, cfg.sliding_window)
-    if ring:
-        # positions that rotated out of the ring are GONE, not pruned: the
-        # dense ring decode renormalises over what the cache holds, and a
-        # ring shorter than the window must match it, not the full-window
-        # prefill it can no longer represent
-        row_total = jnp.minimum(row_total, S)
-    zeros_cnt = jnp.maximum(row_total - stored, 0)[:, None, None, None] \
-        .astype(jnp.float32)
-    denom = denom + zeros_cnt * jnp.exp(-mx)
-    probs = (ex / denom).astype(q.dtype).reshape(B, KV, G, Kp, block)
-    out = jnp.einsum("bkgcq,bcqkh->bkgh", probs, vg)
-    return out.reshape(B, 1, H, hd)
+        sb = colc % NB
+    else:
+        valid = valid & (colc < NB)
+        sb = jnp.minimum(colc, NB - 1)
+    praw = jnp.take_along_axis(page_table, sb, axis=1)     # (B, K)
+    valid = valid & (praw >= 0)
+    phys = jnp.maximum(praw, 0)
+    kg = kp[layer, phys].astype(q.dtype)                   # (B,K,page,KV,hd)
+    vg = vp[layer, phys].astype(q.dtype)
+    return _decode_gathered(cfg, q, kg, vg, posb, colc, valid, block=page,
+                            ring_len=NB * page if ring else None)
 
 
 def bcsr_attention_ops(cfg, bcsr: BCSR):

@@ -1,31 +1,51 @@
-"""Continuous-batching serving engine over a slot-structured KV cache.
+"""Continuous-batching serving engine over a paged (or contiguous) KV cache.
 
-Each engine tick admits waiting requests into free cache slots — fused
-prefill (make_prefill_step(with_cache=True): one full-sequence forward whose
-per-layer RoPE'd K/V are inserted straight into the slot) — then decodes ONE
-token for every active slot in a single batched decode_step with PER-SLOT
-positions: requests of different lengths decode at their own offsets, finish
-independently, and their slots are reclaimed and refilled mid-decode.
+Each engine tick admits waiting requests — fused prefill
+(make_prefill_step(with_cache=True): one full-sequence forward whose
+per-layer RoPE'd K/V are inserted straight into the request's pages/slot) —
+then decodes ONE token for every active slot in a single batched decode_step
+with PER-SLOT positions: requests of different lengths decode at their own
+offsets, finish independently, and their slots are reclaimed and refilled
+mid-decode.
+
+Paged serving (the default for attention families; DESIGN.md §14): K/V live
+in a shared core.kv_pool.PagePool of cross-layer pages and each slot owns a
+page-table row. Admission is free-page admission — a request enters a slot
+when its WORST-CASE page budget (ceil((prompt + max_new)/page), clipped to
+the ring length for sliding-window archs) fits the pool, so a request can
+never run out of pages mid-decode; otherwise it queues (FIFO — never
+crashes). Reclamation decrefs its pages back to the free list (shared prefix
+pages survive in an eviction LRU). Decode writes scatter into the active
+page through the layer-scan carry instead of rewriting every slot's whole
+strip — the PR 5 decode floor.
+
+Prefix sharing (copy-on-write, `share_prefix`): full prompt pages are
+content-addressed by chained digests; a request whose prompt prefix matches
+maps the same physical pages (prefilled ONCE — the millions-of-users shared
+system prompt case), a partially-matching tail page is forked device-side so
+the first divergent token lands in a private copy, and a full-prompt hit
+reuses the recorded first token with zero prefill compute. Sharing is off
+for sliding-window rings (pages are overwritten in place) and for stepwise
+families (recurrent state depends on the full prefix).
 
 Sparse serving (DESIGN.md §11): pass the training run's SparsityPlan (or its
 tables payload) as `spion=` and both phases use it — the prefill runs the
 same block-sparse attention the sparse training phase runs, and decode
-gathers only the cache blocks the query position's pattern row lists
-(core.sparse_attention.sparse_decode_attention), composing with the
-sliding-window ring buffer. The plan must cover the positions the engine
-will ever decode (`SparseAttentionExec.coverage >= prompt + max_new`).
+gathers only the cache blocks the query position's pattern row lists. With
+paging the page size equals the plan block, so that gather is pure page
+indirection. The plan must cover the positions the engine will ever decode
+(`SparseAttentionExec.coverage >= prompt + max_new`).
 
 Cache hygiene, by construction rather than by care:
-  - prefill is per-request (B=1) and the batched decode writes each row at
-    its own slot/position (models.attention.update_cache vector form), so
-    one request can never write into another's cache row — the old engine's
-    padded-prompt pollution (shorter prompts re-feeding their last token
-    every tick) is structurally impossible;
-  - padding junk the fused prefill writes past the prompt length is dead:
-    a position is only ever read after the decode loop has overwritten it
-    (every decode tick writes its K/V at `pos` before attending), and ring
-    slots holding stale positions are masked by the ring position
-    arithmetic.
+  - prefill writes only the request's own pages/slot and the batched decode
+    writes each row through its own page-table row (idle and reclaimed rows
+    clamp to the scratch page), so one request can never write into
+    another's cache — and shared prefix pages are never written at all
+    (decode writes start past the prompt);
+  - padding junk the fused prefill writes past the prompt length is dead: a
+    position is only ever read after the decode loop has overwritten it,
+    ring slots holding stale positions are masked by the ring position
+    arithmetic, and unmapped page-table entries are position-masked.
 """
 from __future__ import annotations
 
@@ -39,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.attention_exec import SparseAttentionExec
+from repro.core.kv_pool import PagedKVCache, PagePool, ROOT_DIGEST
 from repro.core.sparse_attention import SparsityPlan
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models.registry import build
@@ -62,27 +83,46 @@ class ServeEngine:
 
     spion: None | SparsityPlan | tables payload | SparseAttentionExec —
     enables sparse prefill AND pattern-bounded sparse decode from the same
-    layer-wise plan the training run produced.
+    layer-wise plan the training run produced. Refused at construction for
+    families the registry marks supports_sparse_decode=False (rwkv/ssm).
+    paged: None (default: the registry's supports_paged_cache flag) | bool —
+    page the KV cache through a shared core.kv_pool.PagePool. page_size
+    defaults to the plan block (sparse) or min(32, max_len) (dense);
+    num_pages defaults to slots * (max_len/page) + 1 scratch — the
+    contiguous footprint — and is the knob that makes oversubscribed pools
+    (many slots, short requests) cheap.
+    share_prefix: copy-on-write prompt-prefix sharing (default: on whenever
+    paged + fused-prefill + non-ring). stepwise_suffix_max: a shared-prefix
+    request whose uncovered suffix is at most this many tokens prefills the
+    suffix stepwise THROUGH the shared pages (prefix prefilled once) instead
+    of re-running the fused prefill; default 2 pages.
     prefill_bucket: prompts pad up to a multiple of this before the fused
     prefill (bounding jit retraces to one per bucket); causality makes the
     padding free and the junk K/V it writes is never read (see module
     docstring). Sparse plans prefill at the same bucketed length — the
     stacked row tables slice to the prompt's row-blocks
-    (_sparse_prefill_exec; self-contained because the fused path is
-    causal-only), so admission stays O(prompt), not O(plan coverage).
-    Families without a plain KV cache (ssm/hybrid) prefill stepwise into a
-    fresh B=1 cache that is then written into the slot — per-request, so
-    mixed prompt lengths still cannot cross-pollute.
+    (_sparse_prefill_exec), so admission stays O(prompt), not O(coverage).
+    Families without a plain KV cache (ssm) or fused prefill (hybrid/vlm)
+    prefill stepwise — per-request, so mixed prompt lengths still cannot
+    cross-pollute.
     """
 
     def __init__(self, cfg, params, *, slots=4, max_len=512, spion=None,
-                 prefill_bucket=32):
+                 prefill_bucket=32, paged=None, page_size=None,
+                 num_pages=None, share_prefix=None, stepwise_suffix_max=None):
         self.cfg = cfg
         self.bundle = build(cfg)
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
+
+        if spion is not None and not self.bundle.supports_sparse_decode:
+            raise NotImplementedError(
+                f"ServeEngine(spion=...): family {cfg.family!r} (arch "
+                f"{cfg.name!r}) keeps recurrent state, not an attention KV "
+                f"cache — registry supports_sparse_decode is False for it; "
+                f"serve it densely (spion=None)")
 
         self.exec: Optional[SparseAttentionExec] = None
         self._prefill_exec = None
@@ -94,7 +134,66 @@ class ServeEngine:
             self.exec = ex
             self._prefill_exec = SparseAttentionExec.coerce(ex, phase="prefill")
 
-        self.cache = self.bundle.init_cache(slots, max_len)
+        self._can_fuse = (self.bundle.prefill_kv is not None and cfg.causal
+                          and not cfg.num_patch_tokens)
+        self._spion_step = self.bundle.supports_sparse_decode
+        self.paged = (self.bundle.supports_paged_cache if paged is None
+                      else bool(paged))
+        if self.paged and not self.bundle.supports_paged_cache:
+            raise NotImplementedError(
+                f"ServeEngine(paged=True): family {cfg.family!r} keeps "
+                f"recurrent state, not a KV cache — paging does not apply "
+                f"(registry supports_paged_cache is False)")
+
+        if self.paged:
+            self.page = int(page_size or (self.exec.block if self.exec
+                                          else min(32, max_len)))
+            if self.exec is not None and self.page != self.exec.block:
+                raise ValueError(
+                    f"page_size ({self.page}) must equal the sparsity plan "
+                    f"block ({self.exec.block}) so pattern column blocks "
+                    f"and page-table coordinates coincide")
+            if max_len % self.page:
+                raise ValueError(f"max_len ({max_len}) must be a multiple "
+                                 f"of the page size ({self.page})")
+            self.nblocks = max_len // self.page
+            if cfg.family == "hybrid":
+                from repro.models.hybrid import n_attn_apps
+                pool_layers = n_attn_apps(cfg)
+            else:
+                pool_layers = cfg.num_layers
+            npages = int(num_pages) if num_pages else slots * self.nblocks + 1
+            self.pool = PagePool(
+                layers=pool_layers, num_pages=npages, page=self.page,
+                kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                dtype=cfg.cache_dtype or cfg.dtype)
+            self.page_tables = np.full((slots, self.nblocks), -1, np.int32)
+            self._pt_dev = jnp.asarray(self.page_tables)
+            self._held = [False] * slots   # finished slots keep pages mapped
+            # until the next admission needs them (post-run inspection)
+            if cfg.family in ("dense", "moe", "vlm", "encoder"):
+                self._extra_cache = {}     # pure-KV families: nothing else
+            else:
+                base = self.bundle.init_cache(slots, max_len)
+                self._extra_cache = {k: v for k, v in base.items()
+                                     if k not in ("k", "v")}
+            default_share = self._can_fuse and not cfg.sliding_window
+            self.share_prefix = (default_share if share_prefix is None
+                                 else bool(share_prefix))
+            if self.share_prefix and not default_share:
+                raise ValueError(
+                    "share_prefix=True needs a fused-prefill causal family "
+                    "without a sliding-window ring (ring pages are "
+                    "overwritten in place; recurrent prefill state depends "
+                    "on the full prefix)")
+            self.stepwise_suffix_max = (2 * self.page
+                                        if stepwise_suffix_max is None
+                                        else int(stepwise_suffix_max))
+            self.cache = None
+        else:
+            self.share_prefix = False
+            self.cache = self.bundle.init_cache(slots, max_len)
+
         # per-slot NEXT decode position. Freeness is `active[s] is None`;
         # a reclaimed slot's pos stays parked at its final value — the
         # batched decode still writes an (unread) K/V row for idle slots
@@ -102,26 +201,32 @@ class ServeEngine:
         # request never wrote (P + max_new - 1: the last generated token is
         # never fed back) keeps the request's written cache region
         # byte-stable after completion instead of scribbling on position 0.
+        # (Paged idle slots whose page rows were reclaimed write to the
+        # scratch page instead.)
         self.pos = np.full((slots,), -1, np.int64)
         self.active: List[Optional[Request]] = [None] * slots
         self.waiting: Deque[Request] = collections.deque()
+        self.prefill_fused = 0
+        self.prefill_stepwise_tokens = 0
 
         self._decode = jax.jit(
-            make_serve_step(cfg, spion=True), donate_argnums=(1,))
-        self._can_fuse = (self.bundle.prefill_kv is not None and cfg.causal
-                          and not cfg.num_patch_tokens)
+            make_serve_step(cfg, spion=self._spion_step), donate_argnums=(1,))
+        self._decode1 = None
         if self._can_fuse:
             self._prefill = jax.jit(
                 make_prefill_step(cfg, spion=True, with_cache=True))
-            self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
-        else:
-            self._decode1 = jax.jit(make_serve_step(cfg, spion=True))
+            if not self.paged:
+                self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
 
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, req: Request):
-        """Queue a request; it is admitted into a slot (prefilled) at the
-        next engine tick with one free."""
+        """Queue a request; it is admitted (prefilled) at the next engine
+        tick with a free slot AND — paged — a sufficient free-page budget.
+        Requests that could NEVER be admitted are rejected here instead of
+        parking in the queue forever: prompt + max_new is validated against
+        the cache length, the sparsity plan's coverage, and the pool's
+        total page capacity."""
         req.t_submit = time.time()
         req.out = []
         P = len(req.prompt)
@@ -141,6 +246,15 @@ class ServeEngine:
                 f"exceeds the sparsity plan's coverage "
                 f"({self.exec.coverage} positions = nrb * block); build the "
                 f"plan at the serving sequence length")
+        if self.paged:
+            worst = self._page_budget(P, req.max_new)
+            if worst > self.pool.capacity:
+                raise ValueError(
+                    f"request {req.rid}: worst-case page budget {worst} "
+                    f"pages (prompt {P} + max_new {req.max_new} at page "
+                    f"size {self.page}) exceeds the pool capacity "
+                    f"({self.pool.capacity} pages) — it could never be "
+                    f"admitted; raise num_pages or lower max_new")
         self.waiting.append(req)
 
     def step(self):
@@ -159,25 +273,89 @@ class ServeEngine:
             self.step()
         return requests
 
+    # -- inspection -----------------------------------------------------------
+
+    @property
+    def prefix_stats(self) -> dict:
+        """Pool + prefill counters (prefix-hit-rate telemetry)."""
+        st = dict(self.pool.stats) if self.paged else {}
+        st["prefill_fused"] = self.prefill_fused
+        st["prefill_stepwise_tokens"] = self.prefill_stepwise_tokens
+        lk = st.get("lookups", 0)
+        st["prefix_hit_rate"] = (st.get("hits", 0) / lk) if lk else 0.0
+        return st
+
+    def slot_kv(self, s: int, length: int):
+        """Host (L, length, KV, hd) K/V of slot `s`'s cache — contiguous
+        slice or gathered through the slot's page-table row. Tests and
+        inspection, not the serving path."""
+        if not self.paged:
+            return (np.asarray(self.cache["k"][:, s, :length]),
+                    np.asarray(self.cache["v"][:, s, :length]))
+        return self.pool.gather_slot(self.page_tables[s], length)
+
     # -- internals ------------------------------------------------------------
+
+    def _page_budget(self, P: int, max_new: int) -> int:
+        worst = (P + max_new + self.page - 1) // self.page
+        if self.cfg.sliding_window:
+            worst = min(worst, self.nblocks)
+        return worst
+
+    def _ex_args(self):
+        return (self.exec,) if self._spion_step else ()
+
+    def _decode1_step(self):
+        if self._decode1 is None:
+            self._decode1 = jax.jit(
+                make_serve_step(self.cfg, spion=self._spion_step),
+                donate_argnums=(1,))
+        return self._decode1
 
     def _admit(self):
         for s in range(self.slots):
-            if self.waiting and self.active[s] is None:
-                r = self.waiting.popleft()
+            if not self.waiting or self.active[s] is not None:
+                continue
+            r = self.waiting[0]
+            if self.paged:
+                self._release_done_slots()
+                first = self._admit_paged(r, s)
+                if first is None:
+                    break   # FIFO: the head of the line waits for pages
+            else:
                 first = self._prefill_into(r, s)
-                r.slot = s
-                r.out.append(first)
-                r.t_first = time.time()
-                self.active[s] = r
-                self.pos[s] = len(r.prompt)
-                if len(r.out) >= r.max_new:
-                    self._finish(r, s)
+            self.waiting.popleft()
+            r.slot = s
+            r.out.append(first)
+            r.t_first = time.time()
+            self.active[s] = r
+            self.pos[s] = len(r.prompt)
+            if len(r.out) >= r.max_new:
+                self._finish(r, s)
 
     def _finish(self, r: Request, s: int):
         r.done = True
         r.t_done = time.time()
         self.active[s] = None
+        # paged: the slot's pages stay mapped (self._held) until the next
+        # admission wants them — mirrors the contiguous engine keeping a
+        # finished slot's cache region byte-stable for inspection — and are
+        # released lazily by _release_done_slots.
+
+    def _release_done_slots(self):
+        """Return every finished slot's pages to the pool (decref — shared
+        prefix pages survive in the registry LRU)."""
+        dirty = False
+        for s in range(self.slots):
+            if self.active[s] is None and self._held[s]:
+                row = self.page_tables[s]
+                for p in np.unique(row[row >= 0]):
+                    self.pool.decref(int(p))
+                row[:] = -1
+                self._held[s] = False
+                dirty = True
+        if dirty:
+            self._pt_dev = jnp.asarray(self.page_tables)
 
     def _decode_tick(self):
         tok = np.zeros((self.slots, 1), np.int32)
@@ -186,9 +364,11 @@ class ServeEngine:
             posv[s] = max(self.pos[s], 0)   # idle slots park (see __init__)
             if r is not None:
                 tok[s, 0] = r.out[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tok), jnp.asarray(posv),
-            self.exec)
+        cache = self._engine_cache()
+        logits, cache = self._decode(
+            self.params, cache, jnp.asarray(tok), jnp.asarray(posv),
+            *self._ex_args())
+        self._absorb(cache)
         nxt = np.asarray(jnp.argmax(logits, -1))
         for s, r in enumerate(self.active):
             if r is None:
@@ -197,6 +377,169 @@ class ServeEngine:
             self.pos[s] += 1
             if len(r.out) >= r.max_new:
                 self._finish(r, s)
+
+    def _engine_cache(self):
+        if not self.paged:
+            return self.cache
+        pkv = self.pool.cache(self._pt_dev)
+        return pkv if not self._extra_cache else dict(self._extra_cache,
+                                                      kv=pkv)
+
+    def _absorb(self, cache):
+        if not self.paged:
+            self.cache = cache
+            return
+        if isinstance(cache, PagedKVCache):
+            pkv = cache
+        else:
+            pkv = cache["kv"]
+            self._extra_cache = {k: v for k, v in cache.items() if k != "kv"}
+        self.pool.absorb(pkv)
+        self._pt_dev = pkv.pt
+
+    # -- paged admission (free-page admission + COW prefix sharing) -----------
+
+    def _admit_paged(self, r: Request, s: int) -> Optional[int]:
+        """Map pages for request `r` into slot `s`'s page-table row and
+        prefill it; returns its first generated token, or None when the
+        pool cannot cover its worst-case budget yet (the request stays
+        queued). All pages are mapped up front, so decode can never run
+        out mid-request."""
+        P = len(r.prompt)
+        pg = self.page
+        total = self._page_budget(P, r.max_new)
+        prompt = np.asarray(r.prompt, np.int32)
+        m = self.pool.match_prefix(prompt) if self.share_prefix else None
+        nfull = P // pg
+        tail_len = P - nfull * pg
+        nshared = len(m.shared) if m else 0
+        # full-prompt hit: every page resident (tail via COW fork) AND the
+        # first token recorded — zero prefill compute
+        cached_first = (m is not None and nshared == nfull
+                        and m.first_tok is not None
+                        and (tail_len == 0 or m.tail_src is not None))
+        if not cached_first and tail_len == 0 and nshared == nfull:
+            # the would-be refeed case: the last prompt position lives in a
+            # SHARED page we must not write — recompute that page privately
+            nshared = max(nfull - 1, 0)
+
+        need = total - nshared
+        if m:
+            for p in m.shared[:nshared]:
+                self.pool.incref(p)
+        if self.pool.available() < need:
+            if m:
+                for p in m.shared[:nshared]:
+                    self.pool.decref(p)
+            return None
+        fresh = self.pool.alloc(need)
+        row = self.page_tables[s]
+        row[:] = -1
+        if nshared:
+            row[:nshared] = m.shared[:nshared]
+        row[nshared:total] = fresh
+        self._held[s] = True
+        if cached_first and tail_len:
+            self.pool.copy_page(m.tail_src, int(row[nfull]))
+        self._pt_dev = jnp.asarray(self.page_tables)
+
+        covered = P if cached_first else nshared * pg
+        if cached_first:
+            first = int(m.first_tok)
+            self.pool.stats["prefill_reused"] += 1
+            self.pool.stats["prefix_tokens_reused"] += P
+        elif (self._can_fuse
+              and (covered == 0 or P - covered > self.stepwise_suffix_max)):
+            first = self._fused_prefill_paged(r, s, nshared)
+            if m:
+                self.pool.stats["prefix_tokens_reused"] += covered
+        else:
+            first = self._stepwise_prefill_paged(r, s, covered)
+            if m:
+                self.pool.stats["prefix_tokens_reused"] += covered
+        if m is not None and not cached_first:
+            self._register_prompt(prompt, m, row, nshared, first)
+        return first
+
+    def _register_prompt(self, prompt, m, row, nshared, first):
+        pg = self.page
+        nfull = len(m.digests)
+        for i in range(nshared, nfull):
+            parent = m.digests[i - 1] if i else ROOT_DIGEST
+            self.pool.register_full(int(row[i]), m.digests[i], parent,
+                                    tuple(int(t) for t in
+                                          prompt[i * pg:(i + 1) * pg]))
+        tail = tuple(int(t) for t in prompt[nfull * pg:])
+        if tail:
+            parent = m.digests[-1] if nfull else ROOT_DIGEST
+            self.pool.register_tail(int(row[nfull]), parent, tail)
+        self.pool.remember_first_token(m.full_digest, first)
+
+    def _fused_prefill_paged(self, r: Request, s: int, nshared: int) -> int:
+        """Fused full-sequence prefill; page-sized blocks [nshared,
+        ceil(P/page)) of the resulting K/V stacks are scattered into the
+        slot's freshly-allocated pages (shared prefix pages are left
+        untouched). Ring prompts that wrap insert in ring layout."""
+        P = len(r.prompt)
+        pg = self.page
+        Sp = self._prefill_len(P)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :P] = r.prompt
+        pex = None if self._prefill_exec is None \
+            else self._sparse_prefill_exec(Sp)
+        logits, ks, vs = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, pex)
+        row = self.page_tables[s]
+        ring_len = self.nblocks * pg
+        if self.cfg.sliding_window and P >= ring_len:
+            self.pool.insert_ring(ks, vs, row[:self.nblocks], P)
+        else:
+            nb_prompt = (P + pg - 1) // pg
+            if nb_prompt > nshared:
+                self.pool.insert_blocks(ks, vs, row[nshared:nb_prompt],
+                                        nshared)
+        self.prefill_fused += 1
+        return int(jnp.argmax(logits[0, P - 1]))
+
+    def _stepwise_prefill_paged(self, r: Request, s: int, start: int) -> int:
+        """Teacher-force prompt positions [start, P) one at a time through
+        the slot's page-table row with a B=1 decode step — attending the
+        SHARED prefix pages below `start` without recomputing them (this is
+        what makes 'prefill once' literal for shared-prefix suffixes), or
+        from 0 for families without fused prefill (their fresh per-request
+        conv/ssm states are written into the slot afterwards)."""
+        P = len(r.prompt)
+        step1 = self._decode1_step()
+        sub_extra = {}
+        if self._extra_cache:
+            sub_extra = {k: v for k, v in
+                         self.bundle.init_cache(1, self.max_len).items()
+                         if k not in ("k", "v")}
+        ptrow = jnp.asarray(self.page_tables[s:s + 1])
+        logits = None
+        for t in range(start, P):
+            pkv = self.pool.cache(ptrow)
+            cache1 = pkv if not sub_extra else dict(sub_extra, kv=pkv)
+            logits, cache1 = step1(
+                self.params, cache1,
+                jnp.asarray([[r.prompt[t]]], np.int32), jnp.int32(t),
+                *self._ex_args())
+            if sub_extra:
+                pkv = cache1["kv"]
+                sub_extra = {k: v for k, v in cache1.items() if k != "kv"}
+            else:
+                pkv = cache1
+            self.pool.absorb(pkv)
+            ptrow = pkv.pt
+        if sub_extra:
+            self._extra_cache = jax.tree_util.tree_map(
+                lambda c, u: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, s, axis=1),
+                self._extra_cache, sub_extra)
+        self.prefill_stepwise_tokens += P - start
+        return int(jnp.argmax(logits[0]))
+
+    # -- contiguous prefill (paged=False) -------------------------------------
 
     def _prefill_len(self, P: int) -> int:
         if self.exec is not None:
@@ -209,6 +552,9 @@ class ServeEngine:
             b = ((max(self.prefill_bucket, blk) + blk - 1) // blk) * blk
             return min(max(((P + b - 1) // b) * b, b), self.exec.coverage)
         b = self.prefill_bucket
+        if self.paged:
+            # paged inserts scatter whole pages: bucket to page multiples
+            b = ((b + self.page - 1) // self.page) * self.page
         return max(((P + b - 1) // b) * b, b)
 
     def _sparse_prefill_exec(self, Sp: int):
@@ -229,9 +575,9 @@ class ServeEngine:
                                    phase="prefill", kernel=ex.kernel)
 
     def _prefill_into(self, r: Request, s: int) -> int:
-        """Prefill request `r` into cache slot `s`; returns its first
-        generated token (argmax of the last prompt position's logits —
-        which is when t_first is stamped, per request)."""
+        """Contiguous-cache prefill of request `r` into slot `s`; returns
+        its first generated token (argmax of the last prompt position's
+        logits — which is when t_first is stamped, per request)."""
         P = len(r.prompt)
         if self._can_fuse:
             Sp = self._prefill_len(P)
@@ -243,19 +589,22 @@ class ServeEngine:
                 self.params, {"tokens": jnp.asarray(toks)}, pex)
             self.cache = self._insert(self.cache, ks, vs, jnp.int32(s),
                                       jnp.int32(P))
+            self.prefill_fused += 1
             return int(jnp.argmax(logits[0, P - 1]))
-        # stepwise fallback (ssm/hybrid states): teacher-force the prompt
+        # stepwise fallback (ssm states, vlm): teacher-force the prompt
         # through a FRESH B=1 cache — per-request, so no other slot is
         # touched and no stale state leaks in — then write the slot slice
+        step1 = self._decode1_step()
         sub = self.bundle.init_cache(1, self.max_len)
         logits = None
         for t in range(P):
-            logits, sub = self._decode1(
+            logits, sub = step1(
                 self.params, sub, jnp.asarray([[r.prompt[t]]], np.int32),
-                jnp.int32(t), self.exec)
+                jnp.int32(t), *self._ex_args())
         self.cache = jax.tree_util.tree_map(
             lambda c, u: jax.lax.dynamic_update_slice_in_dim(c, u, s, axis=1),
             self.cache, sub)
+        self.prefill_stepwise_tokens += P
         return int(jnp.argmax(logits[0]))
 
     def _insert_fn(self, cache, ks, vs, slot, plen):

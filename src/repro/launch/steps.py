@@ -335,8 +335,22 @@ def make_serve_step(cfg: ModelConfig, *, spion=False, block=None, halo=None):
     """Decode step: (params, cache, tokens, pos[, tables]) -> (logits,
     cache). `pos` may be a scalar or per-row (B,) vector; with `spion` the
     attention families decode sparsely over the pattern-listed cache blocks
-    (tables dict or SparseAttentionExec, as in make_train_step)."""
+    (tables dict or SparseAttentionExec, as in make_train_step). The cache
+    may be the family's contiguous form or its paged form (a
+    core.kv_pool.PagedKVCache, standalone or under a "kv" key) — the
+    decode_step dispatches on the cache type.
+
+    spion=True on a family without an attention KV cache (rwkv/ssm) raises
+    here, at step construction — the registry-level capability flag
+    (bundle.supports_sparse_decode), not a trace-time surprise deep in the
+    layer scan."""
     bundle = build(cfg)
+    if spion and not bundle.supports_sparse_decode:
+        raise NotImplementedError(
+            f"make_serve_step(spion=True): family {cfg.family!r} (arch "
+            f"{cfg.name!r}) keeps recurrent state, not an attention KV "
+            f"cache — registry supports_sparse_decode is False for it. "
+            f"Build the step with spion=False and serve densely.")
     static_block = block or cfg.spion.block_size
     static_halo = None if halo is None else (int(halo[0]), int(halo[1]))
 

@@ -234,6 +234,44 @@ def decode_attention(cfg, q, k_cache, v_cache, pos, kpos=None):
     return out.reshape(B, 1, H, hd)
 
 
+def paged_decode_attention(cfg, q, kp, vp, layer, pos, page_table, *,
+                           page: int):
+    """Dense one-token decode over a paged KV pool (core.kv_pool): gather
+    layer `layer`'s mapped pages through the page table, flatten to the
+    contiguous (B, S, KV, hd) layout, and reuse `decode_attention` with
+    per-position kpos. kp/vp (L, num_pages, page, KV, hd); page_table
+    (B, NB) of physical page ids, -1 = unmapped (those positions get
+    kpos=-1 and are masked; the gather clamps them to the scratch page).
+
+    Sliding-window rings store position p in table slot (p//page) % NB, so
+    kpos must be per-position ring arithmetic (`ring_kpos`), not
+    block-granular — within the active page, offsets past pos % page still
+    hold the PREVIOUS rotation's tokens. Where every block is mapped this
+    is bitwise-identical to the contiguous dense decode (same flattened
+    values, same kpos, same ops)."""
+    B = q.shape[0]
+    NB = page_table.shape[1]
+    KV, hd = kp.shape[3], kp.shape[4]
+    S = NB * page
+    posb = decode_positions(pos, B)
+    phys = jnp.maximum(page_table, 0)
+    kflat = kp[layer, phys].reshape(B, S, KV, hd)
+    vflat = vp[layer, phys].reshape(B, S, KV, hd)
+    if cfg.sliding_window:
+        base = ring_kpos(posb, S)
+    else:
+        base = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kpos = jnp.where(jnp.repeat(page_table >= 0, page, axis=1), base, -1)
+    out = decode_attention(cfg, q, kflat, vflat, posb, kpos=kpos)
+    # a fully-unmapped row (reclaimed serving slot parked on the scratch
+    # page) softmaxes over all -inf -> NaN; that NaN would be scattered into
+    # the SHARED scratch page next layer and 0*NaN-poison every other row's
+    # clamped gathers. Force such rows to zero context (mapped rows pick
+    # their already-computed value — bitwise-neutral).
+    any_ok = jnp.any(page_table >= 0, axis=1)
+    return jnp.where(any_ok[:, None, None, None], out, 0.0)
+
+
 def cache_slot(cfg, pos, cache_len):
     """Ring-buffer slot for the token at absolute position `pos` (scalar or
     per-row vector)."""

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention_exec import SparseAttentionExec
+from repro.core.kv_pool import PagedKVCache, scatter_token, write_target
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -178,7 +179,15 @@ def precompute_cross(params, cfg, frames):
 def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     """pos scalar or (B,) per-row positions; `spion` (exec or payload)
     switches decoder self-attention to the pattern-bounded sparse decode —
-    cross-attention reads the whole precomputed encoder K/V either way."""
+    cross-attention reads the whole precomputed encoder K/V either way.
+
+    Paged form: cache {"kv": core.kv_pool.PagedKVCache, "ck", "cv"} — the
+    decoder self-attention K/V live in the shared page pool (scan CARRY,
+    in-place page scatter) while the precomputed cross K/V stay contiguous
+    (they are written once at admission and never grow)."""
+    if isinstance(cache, dict) and isinstance(cache.get("kv"), PagedKVCache):
+        return _paged_decode_step(params, cfg, cache, tokens, pos,
+                                  spion=spion)
     dtype = jnp.dtype(cfg.dtype)
     ex = SparseAttentionExec.coerce(spion, phase="decode")
     B = tokens.shape[0]
@@ -219,3 +228,55 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
     logits = Lyr.unembed(params["tok_embed"], h)[:, 0]
     return logits, {**cache, "k": ks, "v": vs}
+
+
+def _paged_decode_step(params, cfg, cache, tokens, pos, *, spion=None):
+    """Paged decoder self-attention: the pool rides the scan carry with an
+    in-place page scatter per layer; cross K/V stay scanned xs (read-only)."""
+    dtype = jnp.dtype(cfg.dtype)
+    ex = SparseAttentionExec.coerce(spion, phase="decode")
+    B = tokens.shape[0]
+    posb = A.decode_positions(pos, B)
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    h = h + jnp.take(params["pos_embed"]["w"], posb, axis=0).astype(dtype)[:, None]
+    positions = posb[:, None]
+    ccfg = _enc_cfg(cfg)
+    enc_len = cache["ck"].shape[2]
+    dec = None if ex is None else ex.scan_tables()
+    pkv = cache["kv"]
+    pt = pkv.pt
+    phys_w, off_w = write_target(pt, posb, pkv.page, ring=False)
+
+    def body(carry, xs):
+        h, kp, vp = carry
+        if ex is None:
+            lp, ck, cv, li = xs
+            dl = None
+        else:
+            lp, ck, cv, li, dl = xs
+        x = Lyr.layernorm(lp["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions)
+        kp, vp = scatter_token(kp, vp, li, k_new, v_new, phys_w, off_w)
+        if dl is not None:
+            ctx = ex.decode_paged(cfg, q, kp, vp, li, posb, pt, dl)
+        else:
+            ctx = A.paged_decode_attention(cfg, q, kp, vp, li, posb, pt,
+                                           page=pkv.page)
+        h = h + A.attn_out(cfg, lp["attn"], ctx)
+        x = Lyr.layernorm(lp["cross_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        qc, _, _ = A.qkv(ccfg, lp["cross"], x, positions)
+        ctx = A.decode_attention(ccfg.replace(causal=False), qc, ck, cv, jnp.asarray(enc_len - 1))
+        h = h + A.attn_out(ccfg, lp["cross"], ctx)
+        x = Lyr.layernorm(lp["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
+        h = h + Lyr.mlp(cfg, lp["mlp"], x)
+        return (h, kp, vp), None
+
+    xs = (params["dec_layers"], cache["ck"], cache["cv"],
+          jnp.arange(cfg.num_layers))
+    if ex is not None:
+        xs = xs + (dec,)
+    (h, kp, vp), _ = jax.lax.scan(body, (h, pkv.kp, pkv.vp), xs,
+                                  unroll=cfg.scan_unroll)
+    h = Lyr.layernorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
+    logits = Lyr.unembed(params["tok_embed"], h)[:, 0]
+    return logits, {**cache, "kv": PagedKVCache(kp, vp, pt, page=pkv.page)}

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention_exec import SparseAttentionExec
+from repro.core.kv_pool import PagedKVCache, scatter_token, write_target
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -128,7 +129,14 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
 def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     """pos scalar or (B,) per-row positions; `spion` (exec or payload)
     makes each shared-attention application decode over only its pattern
-    row's cache blocks (per-app tables, indexed like the forward)."""
+    row's cache blocks (per-app tables, indexed like the forward).
+
+    Paged form: cache {"conv", "ssm", "kv": core.kv_pool.PagedKVCache} —
+    the shared block's per-application K/V live in a page pool whose layer
+    axis is the application index, while the recurrent conv/ssm states stay
+    contiguous (fixed-size, no paging win)."""
+    paged = isinstance(cache, dict) and isinstance(cache.get("kv"),
+                                                   PagedKVCache)
     dtype = jnp.dtype(cfg.dtype)
     ex = SparseAttentionExec.coerce(spion, phase="decode")
     h = Lyr.embed(params["tok_embed"], tokens, dtype)
@@ -137,6 +145,10 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     posb = A.decode_positions(pos, tokens.shape[0])
     positions = posb[:, None]
     napps = n_attn_apps(cfg)
+    if paged:
+        pkv = cache["kv"]
+        pt = pkv.pt
+        phys_w, off_w = write_target(pt, posb, pkv.page, ring=False)
 
     # mamba layers scanned; attention caches updated by app index
     def body(carry, xs):
@@ -149,20 +161,31 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
 
         def with_attn(operand):
             h, kall, vall = operand
-            kc = jnp.take(kall, app, axis=0)
-            vc = jnp.take(vall, app, axis=0)
             x = Lyr.rmsnorm(shared["attn_norm"], h.astype(jnp.float32)).astype(h.dtype)
             q, k_new, v_new = A.qkv(cfg, shared["attn"], x, positions)
-            kc, vc = A.update_cache(kc, vc, k_new, v_new, posb)
-            if ex is not None:
-                ctx = ex.decode_app(cfg, q, kc, vc, posb, app)
+            if paged:
+                kall, vall = scatter_token(kall, vall, app, k_new, v_new,
+                                           phys_w, off_w)
+                if ex is not None:
+                    ctx = ex.decode_paged_app(cfg, q, kall, vall, app, posb,
+                                              pt)
+                else:
+                    ctx = A.paged_decode_attention(cfg, q, kall, vall, app,
+                                                   posb, pt, page=pkv.page)
             else:
-                ctx = A.decode_attention(cfg, q, kc, vc, posb)
+                kc = jnp.take(kall, app, axis=0)
+                vc = jnp.take(vall, app, axis=0)
+                kc, vc = A.update_cache(kc, vc, k_new, v_new, posb)
+                if ex is not None:
+                    ctx = ex.decode_app(cfg, q, kc, vc, posb, app)
+                else:
+                    ctx = A.decode_attention(cfg, q, kc, vc, posb)
             h = h + A.attn_out(cfg, shared["attn"], ctx)
             x = Lyr.rmsnorm(shared["mlp_norm"], h.astype(jnp.float32)).astype(h.dtype)
             h = h + Lyr.mlp(cfg, shared["mlp"], x)
-            kall = jax.lax.dynamic_update_index_in_dim(kall, kc, app, 0)
-            vall = jax.lax.dynamic_update_index_in_dim(vall, vc, app, 0)
+            if not paged:
+                kall = jax.lax.dynamic_update_index_in_dim(kall, kc, app, 0)
+                vall = jax.lax.dynamic_update_index_in_dim(vall, vc, app, 0)
             return h, kall, vall
 
         if napps > 0:  # static: reduced 1-layer configs have no attn apps
@@ -171,10 +194,17 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
             app = app + jnp.where(is_attn, 1, 0)
         return (h, app, kall, vall), (st["conv"], st["ssm"])
 
-    carry = (h, jnp.zeros((), jnp.int32), cache["k"], cache["v"])
+    if paged:
+        kv0, vv0 = pkv.kp, pkv.vp
+    else:
+        kv0, vv0 = cache["k"], cache["v"]
+    carry = (h, jnp.zeros((), jnp.int32), kv0, vv0)
     (h, _, kall, vall), (convs, ssms) = jax.lax.scan(
         body, carry, (params["layers"], cache["conv"], cache["ssm"], jnp.arange(cfg.num_layers)),
         unroll=cfg.scan_unroll)
     h = Lyr.rmsnorm(params["final_norm"], h.astype(jnp.float32)).astype(dtype)
     logits = Lyr.unembed(params["lm_head"], h)[:, 0]
+    if paged:
+        return logits, {"conv": convs, "ssm": ssms,
+                        "kv": PagedKVCache(kall, vall, pt, page=pkv.page)}
     return logits, {"conv": convs, "ssm": ssms, "k": kall, "v": vall}

@@ -39,6 +39,11 @@ class ModelBundle(NamedTuple):
     init_cache: Callable
     decode_step: Callable
     prefill_kv: Optional[Callable] = None
+    # capability flags, checked at engine/step construction (not deep in a
+    # layer scan): the ssm family keeps recurrent state, so there is no
+    # attention KV cache to sparsify or page
+    supports_sparse_decode: bool = True
+    supports_paged_cache: bool = True
 
 
 def _family_module(cfg: ModelConfig):
@@ -96,8 +101,10 @@ def build(cfg: ModelConfig) -> ModelBundle:
         def prefill_kv(params, batch, *, spion=None):
             return mod.prefill_step(params, cfg, batch, spion=spion)
 
+    has_kv = cfg.family != "ssm"
     return ModelBundle(cfg, init, forward, loss, init_cache, decode_step,
-                       prefill_kv)
+                       prefill_kv, supports_sparse_decode=has_kv,
+                       supports_paged_cache=has_kv)
 
 
 # ---------------------------------------------------------------------------

@@ -220,7 +220,13 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     # but unused: the recurrent state is position-free, which is exactly the
     # O(1)-per-token long-context property.
     if spion is not None:
-        raise ValueError("rwkv decode has no attention cache to sparsify")
+        raise NotImplementedError(
+            "rwkv (family 'ssm') keeps recurrent state, not an attention KV "
+            "cache — there is nothing for a sparsity plan to gather. Check "
+            "registry.build(cfg).supports_sparse_decode before constructing "
+            "a sparse serve step (launch.steps.make_serve_step and "
+            "launch.serve.ServeEngine do) and serve this family densely "
+            "(spion=None). This raise is a trace-time backstop only.")
     dtype = jnp.dtype(cfg.dtype)
     h = Lyr.embed(params["tok_embed"], tokens, dtype)
     h = Lyr.layernorm(params["in_norm"], h.astype(jnp.float32)).astype(dtype)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention_exec import SparseAttentionExec
+from repro.core.kv_pool import PagedKVCache, scatter_token, write_target
 from repro.distributed.sharding import constrain
 from repro.models import attention as A
 from repro.models import layers as Lyr
@@ -177,7 +178,17 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     payload — when present, attention gathers only the cache blocks the
     query position's pattern row lists (sparse decode, DESIGN.md §11)
     instead of reading the whole cache; composes with the sliding-window
-    ring buffer."""
+    ring buffer.
+
+    The cache is either the contiguous per-slot dict {"k","v"} from
+    `init_cache` or a core.kv_pool.PagedKVCache — a shared page pool plus
+    per-request page tables. The paged form carries the pool through the
+    layer scan as CARRY and scatter-updates only each row's active page
+    (kv_pool.scatter_token), instead of rewriting every slot's whole strip
+    through the scan ys — the PR 5 decode floor."""
+    if isinstance(cache, PagedKVCache):
+        return _paged_decode_step(params, cfg, cache, tokens, pos,
+                                  spion=spion)
     dtype = _dtype(cfg)
     ex = SparseAttentionExec.coerce(spion, phase="decode")
     B = tokens.shape[0]
@@ -222,6 +233,63 @@ def decode_step(params, cfg, cache, tokens, pos, *, spion=None):
     head = params["lm_head" if "lm_head" in params else "tok_embed"]
     logits = Lyr.unembed(head, h)[:, 0]
     return constrain(logits, "batch", "model"), {"k": ks, "v": vs}
+
+
+def _paged_decode_step(params, cfg, cache, tokens, pos, *, spion=None):
+    """`decode_step` over a PagedKVCache. The pool arrays ride the scan
+    CARRY (donated in-place under jit), each layer scatter-writes the new
+    token into the row's active physical page, and attention gathers
+    through the page table — sparse (exec.decode_paged) or dense
+    (attention.paged_decode_attention). The page table itself is constant
+    through the step and is passed back out unchanged (aliasing the donated
+    input)."""
+    dtype = _dtype(cfg)
+    ex = SparseAttentionExec.coerce(spion, phase="decode")
+    B = tokens.shape[0]
+    posb = A.decode_positions(pos, B)
+    h = Lyr.embed(params["tok_embed"], tokens, dtype)
+    if not cfg.rope_theta and "pos_embed" in params:
+        h = h + jnp.take(params["pos_embed"]["w"], posb, axis=0).astype(dtype)[:, None]
+    positions = posb[:, None]
+    h = constrain(h, "batch", None, None)
+    dec = None if ex is None else ex.scan_tables()
+    pt = cache.pt
+    ring = bool(cfg.sliding_window)
+    phys_w, off_w = write_target(pt, posb, cache.page, ring=ring)
+
+    def body(carry, xs):
+        h, kp, vp = carry
+        if ex is None:
+            lp, li = xs
+            dl = None
+        else:
+            lp, li, dl = xs
+        x = Lyr.norm(cfg, lp["attn_norm"], h)
+        q, k_new, v_new = A.qkv(cfg, lp["attn"], x, positions)
+        kp, vp = scatter_token(kp, vp, li, k_new, v_new, phys_w, off_w)
+        if dl is not None:
+            ctx = ex.decode_paged(cfg, q, kp, vp, li, posb, pt, dl, ring=ring)
+        else:
+            ctx = A.paged_decode_attention(cfg, q, kp, vp, li, posb, pt,
+                                           page=cache.page)
+        h = h + A.attn_out(cfg, lp["attn"], ctx)
+        x = Lyr.norm(cfg, lp["mlp_norm"], h)
+        if cfg.moe is not None:
+            y, _ = moe_apply(cfg, lp["moe"], x)
+        else:
+            y = Lyr.mlp(cfg, lp["mlp"], x)
+        return (h + y, kp, vp), None
+
+    xs = (params["layers"], jnp.arange(cfg.num_layers))
+    if ex is not None:
+        xs = xs + (dec,)
+    (h, kp, vp), _ = jax.lax.scan(body, (h, cache.kp, cache.vp), xs,
+                                  unroll=cfg.scan_unroll)
+    h = Lyr.norm(cfg, params["final_norm"], h)
+    head = params["lm_head" if "lm_head" in params else "tok_embed"]
+    logits = Lyr.unembed(head, h)[:, 0]
+    return constrain(logits, "batch", "model"), \
+        PagedKVCache(kp, vp, pt, page=cache.page)
 
 
 def prefill_step(params, cfg, batch, *, spion=None):

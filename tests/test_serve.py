@@ -15,6 +15,7 @@ Covers the DESIGN.md §11 invariants:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.attention_exec import SparseAttentionExec
@@ -113,11 +114,13 @@ def test_continuous_batching_more_requests_than_slots():
         assert r.out == _reference_tokens(b, params, p, m, 32), r.rid
 
 
-def test_mixed_prompt_lengths_bitwise_clean_caches():
+@pytest.mark.parametrize("paged", [False, True])
+def test_mixed_prompt_lengths_bitwise_clean_caches(paged):
     """Each slot's written cache region after a mixed-length batched run is
     BITWISE identical to an isolated run of the same request — per-slot
     positions + per-request prefill make cross-slot pollution structurally
-    impossible."""
+    impossible, for both the contiguous cache and the paged pool (whose
+    slot view is gathered back through the page table by slot_kv)."""
     cfg = _cfg()
     b = build(cfg)
     params = b.init(jax.random.key(0))
@@ -127,23 +130,23 @@ def test_mixed_prompt_lengths_bitwise_clean_caches():
     prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
                for n in lens]
 
-    eng = ServeEngine(cfg, params, slots=4, max_len=32)
+    eng = ServeEngine(cfg, params, slots=4, max_len=32, paged=paged)
     reqs = [Request(rid=i, prompt=p, max_new=max_new)
             for i, p in enumerate(prompts)]
     eng.run(reqs)
 
     for i, p in enumerate(prompts):
-        solo = ServeEngine(cfg, params, slots=4, max_len=32)
+        solo = ServeEngine(cfg, params, slots=4, max_len=32, paged=paged)
         rs = Request(rid=i, prompt=p.copy(), max_new=max_new)
         solo.run([rs])
         assert reqs[i].out == rs.out, i
         # written region: prompt + fed generated tokens (the last generated
         # token is never fed back, so P + max_new - 1 positions)
         n = len(p) + max_new - 1
-        for leaf in ("k", "v"):
-            a = eng.cache[leaf][:, i, :n]
-            w = solo.cache[leaf][:, 0, :n]
-            assert bool(jnp.all(a == w)), (i, leaf)
+        ka, va = eng.slot_kv(i, n)
+        kw, vw = solo.slot_kv(0, n)
+        assert np.array_equal(ka, kw), i
+        assert np.array_equal(va, vw), i
 
 
 # ---------------------------------------------------------------------------
