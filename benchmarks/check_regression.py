@@ -1,0 +1,97 @@
+"""Kernel-bench trajectory regression gate (CI).
+
+Reads a BENCH_*.json trajectory (a list of run entries, each with `rows`)
+and fails if the LATEST entry regressed against the history on the gated
+kernel rows:
+
+  *_us rows (lower is better)           latest <= factor * median(history)
+  *.pct_of_peak rows (higher is better) latest >= median(history) / factor
+
+`factor` defaults to 3.0 — wall clocks in the committed trajectory span
+different machines (dev boxes, CI runners), so the gate catches step-change
+regressions (an accidentally serialized DMA ring, a grid that stopped
+shrinking), not single-digit-percent noise. Override with
+SPION_BENCH_GATE_FACTOR or --factor. Rows with fewer than 2 historical
+samples pass trivially (a fresh row has no baseline yet).
+
+Usage: python benchmarks/check_regression.py [BENCH_smoke.json] [--factor F]
+Exit 0 = no regression, 1 = regression, 2 = unusable trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+# the gated rows: the compiled-lane kernel trajectory. Serving/engine
+# throughputs and model-level steps are intentionally NOT gated — they mix
+# too much non-kernel machinery to hold a cross-machine line.
+GATED_PREFIXES = ("bwd.dq_us", "bwd.dkv_padded_us", "bwd.dkv_plan_us",
+                  "train_step.attn_fused_bwd_transpose_us",
+                  "train_step.attn_fused_bwd_plan_us",
+                  "roofline.fused_fwd.pct_of_peak",
+                  "roofline.fused_dq.pct_of_peak",
+                  "roofline.fused_dkv.pct_of_peak")
+
+
+def _series(hist):
+    """row name -> list of values across trajectory entries, in order."""
+    out = {}
+    for entry in hist:
+        for r in entry.get("rows", []):
+            out.setdefault(r["name"], []).append(r["value"])
+    return out
+
+
+def check(path: str, factor: float) -> int:
+    try:
+        with open(path) as f:
+            hist = json.load(f)
+        if not isinstance(hist, list) or not hist:
+            raise ValueError("trajectory is not a non-empty list")
+    except (OSError, json.JSONDecodeError, ValueError) as e:
+        print(f"check_regression: unusable trajectory {path}: {e}",
+              file=sys.stderr)
+        return 2
+    series = _series(hist)
+    failures = []
+    for name in sorted(series):
+        if not name.startswith(GATED_PREFIXES):
+            continue
+        vals = [float(v) for v in series[name]]
+        *prior, latest = vals
+        if len(prior) < 1:
+            print(f"  pass  {name}: first sample ({latest}) — no baseline")
+            continue
+        base = statistics.median(prior)
+        if name.endswith(".pct_of_peak"):
+            ok, cmp = latest >= base / factor, f">= {base / factor:.4g}"
+        else:
+            ok, cmp = latest <= base * factor, f"<= {base * factor:.4g}"
+        status = "pass" if ok else "FAIL"
+        print(f"  {status}  {name}: latest={latest:.4g} "
+              f"median({len(prior)} prior)={base:.4g} need {cmp}")
+        if not ok:
+            failures.append(name)
+    if failures:
+        print(f"check_regression: {len(failures)} gated row(s) regressed "
+              f"beyond {factor}x: {failures}", file=sys.stderr)
+        return 1
+    print(f"check_regression: OK ({path}, factor={factor})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="BENCH_smoke.json")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("SPION_BENCH_GATE_FACTOR",
+                                                 3.0)))
+    args = ap.parse_args(argv)
+    return check(args.path, args.factor)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

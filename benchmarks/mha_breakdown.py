@@ -18,9 +18,12 @@ reproduces). Derived column reports op-count ratios from §4.4.
 `train_step_rows` is the honesty check the paper's headline demands: SPION
 claims cheaper *training*, so the number that matters is fwd+bwd, not fwd.
 It times (a) attention-level value_and_grad through the dense path, the jnp
-BCSR path, and — on TPU — the fused Pallas kernel with its custom-VJP
-backward, and (b) one full optimizer train step in the dense vs sparse
-phase via launch.steps.make_train_step.
+BCSR path, and — on compiled backends (TPU Mosaic / GPU Triton) — the fused
+Pallas kernel with its custom-VJP backward, and (b) one full optimizer
+train step in the dense vs sparse phase via launch.steps.make_train_step.
+
+All wall clocks go through benchmarks/timing.time_us (warmup discarded,
+min-of-reps, block_until_ready around every rep).
 """
 from __future__ import annotations
 
@@ -30,18 +33,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import time_us as _time  # noqa: F401 (shared hygiene)
 from repro.configs import get_config
 from repro.core.sparse_attention import bcsr_from_blockmask
 from repro.kernels import ref as kref
-
-
-def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
 def rows(out, L=1024, D=64, block=32, density=0.08):
@@ -389,7 +384,8 @@ def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
     out("train_step.attn_sparse_jnp_fwdbwd_us", round(t_sparse, 1),
         f"speedup={t_dense / t_sparse:.2f}x density={density}")
 
-    if jax.default_backend() == "tpu":
+    from repro.kernels.dispatch import is_compiled_backend
+    if is_compiled_backend():
         from repro.kernels.ops import _flatten_bk, _split_heads
         col = jnp.maximum(bcsr.col_idx, 0)
         qs, ks, vs, dims = _split_heads(q, k, v)
@@ -406,7 +402,8 @@ def train_step_rows(out, L=512, D=32, block=32, density=0.12, smoke=False):
             f"speedup={t_dense / t_fused:.2f}x (custom VJP Pallas bwd)")
     else:
         out("train_step.attn_sparse_fused_fwdbwd_us", 0,
-            "skipped: non-TPU backend runs the Pallas interpreter")
+            "skipped: non-compiled backend runs the Pallas interpreter "
+            "(compiled lanes: TPU Mosaic, GPU Triton)")
 
     # SparsityPlan before/after (any backend; Pallas interpreter on CPU):
     # fused fwd+bwd where the backward either rebuilds the transposed tables

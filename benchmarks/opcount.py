@@ -4,6 +4,10 @@ dense  A: 2 L^2 (2D+1) - L (D+1)
 sparse S: 2 C   (2D+1) - L (D+1)     (C = stored elements)
 The paper's AAN example (L=4096, D=64, C=10% of L^2) gives
 4,328,255,488 vs 432,585,778 — reproduced exactly.
+
+Purely analytic — no timed regions. Any timing added here must go through
+benchmarks/timing.time_us (warmup discarded, min-of-reps,
+block_until_ready), the shared hygiene every wall-clock row follows.
 """
 from __future__ import annotations
 

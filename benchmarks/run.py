@@ -27,6 +27,12 @@ perf history that CI uploads as an artifact.
                    jax.distributed CPU job, plus the divergence-rollback leg
                    (NaN-poisoned step -> quarantine + pinned-checkpoint
                    restore + replay) — recovery health, not kernel perf
+  autotune         compiled-lane autotuner: candidate sweep -> on-disk
+                   cache -> SparseAttentionExec pickup (cache_hit row) with
+                   the bitwise tuned-vs-default identity asserted
+  roofline_kernels measured %-of-roofline per fused kernel (fwd/dQ/dK,dV)
+                   vs per-backend peaks (SPION_PEAK_FLOPS/_BYTES_S) — the
+                   per-kernel trajectory CI gates with check_regression.py
   sparsity_ratio   Fig. 7 step time vs sparsity ratio
   memory_footprint Fig. 5 memory column
   accuracy_proxy   Table 2 convergence proxy (generated ListOps)
@@ -70,10 +76,15 @@ def _parse_args(argv):
 
 
 def _mods(smoke):
-    from benchmarks import (accuracy_proxy, fault_recovery, memory_footprint,
-                            mha_breakdown, opcount, roofline, sparsity_ratio)
+    from benchmarks import (accuracy_proxy, autotune_bench, fault_recovery,
+                            memory_footprint, mha_breakdown, opcount,
+                            roofline, sparsity_ratio)
     faultrecovery = SimpleNamespace(
         rows=functools.partial(fault_recovery.rows, smoke=smoke))
+    autotune = SimpleNamespace(
+        rows=functools.partial(autotune_bench.rows, smoke=smoke))
+    roofline_kernels = SimpleNamespace(
+        rows=functools.partial(roofline.kernel_rows, smoke=smoke))
     train_step = SimpleNamespace(
         rows=functools.partial(mha_breakdown.train_step_rows, smoke=smoke))
     bwd = SimpleNamespace(
@@ -90,10 +101,14 @@ def _mods(smoke):
         return [("opcount", opcount), ("mha_breakdown", breakdown),
                 ("train_step", train_step), ("bwd", bwd),
                 ("sharded", sharded), ("seqshard", seqshard),
-                ("serve", serve), ("faultrecovery", faultrecovery)]
+                ("serve", serve), ("autotune", autotune),
+                ("roofline_kernels", roofline_kernels),
+                ("faultrecovery", faultrecovery)]
     return [("opcount", opcount), ("mha_breakdown", mha_breakdown),
             ("train_step", train_step), ("bwd", bwd), ("sharded", sharded),
             ("seqshard", seqshard), ("serve", serve),
+            ("autotune", autotune),
+            ("roofline_kernels", roofline_kernels),
             ("faultrecovery", faultrecovery),
             ("sparsity_ratio", sparsity_ratio),
             ("memory_footprint", memory_footprint),

@@ -1,0 +1,26 @@
+"""Shared wall-clock timing hygiene for every benchmark module.
+
+One discipline, one place: dispatch-warm the jitted callable first (the
+warmup reps — compile + first-run caches — are DISCARDED), then report the
+MIN over `reps` timed calls, each bracketed by `jax.block_until_ready` so
+async dispatch can't leak a rep's work into the next rep's window. Min, not
+mean: on shared CI runners the distribution is one clean floor plus
+noisy-neighbour outliers, and the floor is the number that tracks the code.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_us(fn, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Min-of-`reps` wall time of ``fn(*args)`` in microseconds."""
+    for _ in range(max(int(warmup), 1)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(int(reps), 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6

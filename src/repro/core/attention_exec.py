@@ -9,11 +9,16 @@ four places that had to agree. The exec centralises all of it:
 
   - `tables`  — the SparsityPlan array payload (col_idx / nvalid and, when
     plan-built, row_idx / nvalid_t), TRACED: they are step inputs.
-  - `block`, `halo`, `phase`, `kernel` — STATIC metadata, carried as pytree
-    aux_data. Passing an exec through `jax.jit` therefore keys the trace on
-    them automatically: a new plan with a different halo retraces the step
-    without any caller-side bookkeeping (launch/train.Trainer used to track
-    the halo by hand to know when to rebuild its jitted sparse step).
+  - `block`, `halo`, `phase`, `kernel`, `kernel_config` — STATIC metadata,
+    carried as pytree aux_data. Passing an exec through `jax.jit` therefore
+    keys the trace on them automatically: a new plan with a different halo
+    (or a different autotuned kernel config) retraces the step without any
+    caller-side bookkeeping (launch/train.Trainer used to track the halo by
+    hand to know when to rebuild its jitted sparse step). `kernel_config`
+    is the autotuner's per-pattern scheduling pick (kernels/autotune.py),
+    resolved from the on-disk cache at construction when the tables are
+    concrete — so both the training step and the serve engine hit tuned
+    configs simply by building their exec outside jit.
 
 `phase` is "train" | "prefill" | "decode". Train and prefill share
 `attend()` (full-sequence block-sparse attention, fused-Pallas or jnp per
@@ -70,10 +75,15 @@ def resolve_kernel(cfg, batch: int, kv_heads: int, *, nrb=None, halo=None,
         baxes, kv_ax = kernel_shard_axes(mesh, batch, kv_heads)
         seq_ax, _ = kernel_seq_axis(mesh, nrb, halo)
         return "fused" if (baxes or kv_ax or seq_ax) else "jnp"
-    # meshless: the fused kernel compiles through Mosaic only on TPU; with
-    # multiple devices but no mesh there is nothing to shard over, so stay
-    # on the jnp path (jit places it on the default device either way)
-    on_tpu = jax.default_backend() == "tpu" and jax.device_count() == 1
+    # meshless: "auto" takes the compiled kernel lane only where the
+    # Mosaic port exists today (TPU, single device; with multiple devices
+    # but no mesh there is nothing to shard over). GPU counts as a
+    # compiled backend in kernels/dispatch (no silent interpreter), but
+    # the prefetch-grid kernels have not been ported to Triton yet, so
+    # "auto" stays on jnp there — an explicit kernel="fused" engages the
+    # Triton lane and fails loudly if lowering is unsupported.
+    from repro.kernels.dispatch import compiled_backend
+    on_tpu = compiled_backend() == "tpu" and jax.device_count() == 1
     return "fused" if on_tpu else "jnp"
 
 
@@ -90,7 +100,7 @@ class SparseAttentionExec:
     does not haul the stacked arrays into every layer)."""
 
     def __init__(self, tables, *, block, halo=None, phase="train",
-                 kernel=None):
+                 kernel=None, kernel_config=None):
         if phase not in _PHASES:
             raise ValueError(f"phase must be one of {_PHASES}, got {phase!r}")
         self.tables = {k: tables[k] for k in PLAN_TABLE_KEYS
@@ -99,31 +109,48 @@ class SparseAttentionExec:
         self.halo = None if halo is None else (int(halo[0]), int(halo[1]))
         self.phase = phase
         self.kernel = kernel  # None -> defer to cfg.spion.kernel
+        # the autotune cache is consulted HERE, once per exec construction
+        # (kernels/autotune.py): a pure on-disk lookup keyed by the pattern
+        # digest, never a sweep. The resolved KernelConfig rides the pytree
+        # aux (static), so every jitted step using this exec — training and
+        # serving alike — hits the tuned schedule without retracing per
+        # step. Construction under jit (tracer tables, e.g. the legacy
+        # dict payload crossing launch/steps._coerce_step_tables) skips
+        # the lookup: no digest of a tracer, config stays as given.
+        if kernel_config is None and self.tables and \
+                not any(isinstance(v, jax.core.Tracer)
+                        for v in self.tables.values()):
+            from repro.kernels.autotune import lookup
+            kernel_config = lookup(self.tables, self.block)
+        self.kernel_config = kernel_config
 
     # -- pytree protocol (tables traced; everything else static) -------------
 
     def tree_flatten(self):
         keys = tuple(k for k in PLAN_TABLE_KEYS if k in self.tables)
         children = tuple(self.tables[k] for k in keys)
-        return children, (keys, self.block, self.halo, self.phase, self.kernel)
+        return children, (keys, self.block, self.halo, self.phase,
+                          self.kernel, self.kernel_config)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        keys, block, halo, phase, kernel = aux
+        keys, block, halo, phase, kernel, kernel_config = aux
         ex = cls.__new__(cls)
         ex.tables = dict(zip(keys, children))
         ex.block, ex.halo, ex.phase, ex.kernel = block, halo, phase, kernel
+        ex.kernel_config = kernel_config
         return ex
 
     def __repr__(self):
         shapes = {k: getattr(v, "shape", None) for k, v in self.tables.items()}
         return (f"SparseAttentionExec(phase={self.phase!r}, block={self.block}, "
-                f"halo={self.halo}, kernel={self.kernel!r}, tables={shapes})")
+                f"halo={self.halo}, kernel={self.kernel!r}, "
+                f"kernel_config={self.kernel_config!r}, tables={shapes})")
 
     # -- constructors ---------------------------------------------------------
 
     @classmethod
-    def coerce(cls, spion, *, phase=None, kernel=None):
+    def coerce(cls, spion, *, phase=None, kernel=None, kernel_config=None):
         """None | exec | tables-dict payload -> exec (or None).
 
         The dict form is the historical `spion=` payload: stacked (or
@@ -136,16 +163,20 @@ class SparseAttentionExec:
         if isinstance(spion, cls):
             if phase is not None and spion.phase != phase:
                 return cls(spion.tables, block=spion.block, halo=spion.halo,
-                           phase=phase, kernel=kernel or spion.kernel)
+                           phase=phase, kernel=kernel or spion.kernel,
+                           kernel_config=kernel_config or spion.kernel_config)
             return spion
         return cls(spion, block=spion["block"], halo=spion.get("halo"),
-                   phase=phase or "train", kernel=kernel)
+                   phase=phase or "train", kernel=kernel,
+                   kernel_config=kernel_config)
 
     @classmethod
-    def from_plan(cls, plan, *, phase="train", kernel=None):
+    def from_plan(cls, plan, *, phase="train", kernel=None,
+                  kernel_config=None):
         """From a core.sparse_attention.SparsityPlan (halo from its stats)."""
         return cls(plan.tables, block=plan.tables["block"],
-                   halo=plan.stats.get("halo"), phase=phase, kernel=kernel)
+                   halo=plan.stats.get("halo"), phase=phase, kernel=kernel,
+                   kernel_config=kernel_config)
 
     # -- table views ----------------------------------------------------------
 
@@ -184,10 +215,11 @@ class SparseAttentionExec:
                               prefer=self.kernel)
         if impl == "fused":
             from repro.kernels.ops import spion_attention_kernel
-            return spion_attention_kernel(cfg, q, k, v, bcsr, fused=True,
+            return spion_attention_kernel(cfg, q, k, v, bcsr,
                                           row_idx=layer_tables.get("row_idx"),
                                           nvalid_t=layer_tables.get("nvalid_t"),
-                                          halo=self.halo)
+                                          halo=self.halo,
+                                          config=self.kernel_config)
         return bcsr_attention(cfg, q, k, v, bcsr)
 
     def attend_app(self, cfg, q, k, v, app_idx):

@@ -1,11 +1,15 @@
-"""Pallas TPU kernels for the SPION sparse-MHA hot spots.
+"""Pallas kernels for the SPION sparse-MHA hot spots.
 
-sddmm / sparse_softmax / spmm: the paper-faithful 3-kernel pipeline
-(cusparseSDDMM / warp softmax / cusparseSpMM adapted to BCSR + MXU tiles).
-block_sparse_attn: beyond-paper fused flash-style kernel, differentiable
-(custom VJP with Pallas dQ and dK/dV backward kernels).
-ops: jit'd public wrappers; ref: pure-jnp oracles; dispatch: platform knobs
-(interpret=None resolves to compiled-on-TPU / interpreter elsewhere).
+block_sparse_attn: the single-pass fused flash-style kernel — the only
+production path — differentiable (custom VJP with Pallas dQ and dK/dV
+backward kernels) and double-buffered (DMA ring over the BCSR-indexed
+K/V fetch). The paper's 3-kernel SDDMM / sparse-softmax / SpMM pipeline
+survives solely as the pure-jnp oracle in ref.py (parity tests, Fig. 6).
+ops: jit'd public wrappers; dispatch: platform knobs (interpret=None
+resolves to compiled on TPU/GPU, interpreter elsewhere) + the hashable
+KernelConfig; autotune: per-pattern config sweep with a persistent
+on-disk cache (SPION_AUTOTUNE_DIR); sharded: the shard_map wrapper.
 """
-from repro.kernels.dispatch import default_interpret  # noqa: F401
+from repro.kernels.dispatch import (KernelConfig,  # noqa: F401
+                                    default_interpret)
 from repro.kernels.ops import spion_attention_kernel  # noqa: F401

@@ -1,25 +1,42 @@
 """Fused block-sparse flash attention — the BEYOND-PAPER kernel, now
-differentiable end-to-end (jax.custom_vjp with Pallas forward AND backward).
+differentiable end-to-end (jax.custom_vjp with Pallas forward AND backward)
+and the ONLY production attention kernel (the paper's 3-kernel
+SDDMM -> sparse softmax -> SpMM pipeline survives solely as the pure-jnp
+oracle in kernels/ref.py — see DESIGN.md §15).
 
-Forward: one kernel replaces the paper's SDDMM -> sparse softmax -> SpMM
-pipeline: for each (batch*kv-head, q-head-in-group, row-block), the K active
-KV tiles stream through VMEM with running (max, sum, acc) flash statistics.
-S^r and S^s never touch HBM — this is the TPU-native realisation of the
-paper's data-locality argument (DESIGN.md §2), and it removes the
-O(nnz * B^2) intermediate traffic the faithful pipeline pays. The sparse
-softmax zero-correction (Alg. 6 line 15) is applied to the final denominator,
-so the kernel is bit-compatible (up to fp assoc.) with the 3-kernel path.
-Alongside the context it emits per-row log-sum-exp residuals
+Forward: one kernel replaces the paper's three: for each
+(batch*kv-head, q-head-in-group, row-block), the K active KV tiles stream
+through VMEM with running (max, sum, acc) flash statistics. S^r and S^s
+never touch HBM — this is the TPU-native realisation of the paper's
+data-locality argument (DESIGN.md §2), and it removes the O(nnz * B^2)
+intermediate traffic the faithful pipeline pays. The sparse softmax
+zero-correction (Alg. 6 line 15) is applied to the final denominator, so
+the kernel is bit-compatible (up to fp assoc.) with the reference
+pipeline. Alongside the context it emits per-row log-sum-exp residuals
 lse = m + log(denom); with the correction folded into denom, the softmax
 probabilities reconstruct exactly as p = exp(s - lse) in the backward.
 
+Double-buffered BCSR fetch (DESIGN.md §15): the gathered operands — K/V
+tiles in the forward and dQ, Q/dO/lse/delta row slices in dK/dV — live in
+HBM (`pltpu.ANY`) and are DMA'd into a `depth`-slot VMEM ring with
+`pltpu.make_async_copy`, so the NEXT column block's fetch overlaps the
+CURRENT block's matmul. Schedule per grid step (K = table width):
+prologue starts DMAs 0..depth-2; loop iteration i first starts DMA
+i+depth-1 into the slot iteration i-1 just drained, then waits DMA i
+(slot i % depth) and computes. depth=1 degenerates to a synchronous
+fetch; the depth (and the Mosaic/Triton lowering knobs) come from the
+`KernelConfig` the autotuner picked (kernels/autotune.py). Entries past
+`nvalid` fetch a (clamped, in-range) tile unconditionally and are masked
+out of the flash update as exact no-ops — uniform DMA traffic keeps the
+pipeline free of start/wait divergence.
+
 Backward (flash-attention-2 style, sparse):
-  dQ    — same (N, G, nrb, K) row-block grid as the forward, streaming the
+  dQ    — same (N, G, nrb) row-block grid as the forward, streaming the
           active KV tiles and accumulating dq = scale * sum_c ds_c K_c.
   dK/dV — column-block grid over the TRANSPOSED BCSR tables: for
           column-block c, stream the row-blocks that reference it (and the
-          G query heads sharing the kv head, innermost so the output tile is
-          revisited consecutively) and accumulate dv += p^T dO,
+          G query heads sharing the kv head, innermost so the output tile
+          is revisited consecutively) and accumulate dv += p^T dO,
           dk += scale * ds^T Q. The transposed tables come either from a
           host-built SparsityPlan (width KT* = true max column population,
           precomputed at phase transition) or, as a fallback, from the
@@ -31,9 +48,9 @@ and no value, so they alter only the forward normaliser — the standard
 softmax cotangent identity still holds on the active pattern and gradients
 match the dense reference there (tests/test_kernels.py).
 
-Grids: fwd/dQ (N, G, nrb, K); dK/dV (N, ncb, KT, G) with KT = KT* under a
-plan, KT = nrb on the fallback — innermost dims sequential; accumulators in
-VMEM scratch.
+Grids: fwd/dQ (N, G, nrb) with the K streaming loop INSIDE each grid step
+(that is what makes the DMA ring possible); dK/dV (N, ncb, G) with the KT
+loop inside and g innermost-sequential for the scratch accumulators.
 
 Sequence-parallel operation (DESIGN.md §10): every kernel takes a third
 scalar-prefetch input `offs = [row0, col0]` mapping shard-local block
@@ -58,7 +75,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparse_attention import bcsr_transpose
 from repro.distributed.sharding import current_mesh
-from repro.kernels.dispatch import default_interpret, in_sharded_body
+from repro.kernels.dispatch import (DEFAULT_CONFIG, KernelConfig,
+                                    compiled_backend, default_interpret,
+                                    in_sharded_body)
 
 NEG = -1e30
 
@@ -75,72 +94,130 @@ def _tile_mask(r, col, block, causal, sliding_window):
     return ok
 
 
+def _depth(config, width):
+    """Effective ring depth: never deeper than the streamed table width."""
+    return max(1, min(int(config.depth), max(int(width), 1)))
+
+
+def _compiler_params(config, interpret, default_semantics):
+    """Backend-specific lowering knobs from the tuned KernelConfig.
+
+    None in interpret mode (nothing lowers) and on unknown backends.
+    Mosaic gets dimension_semantics — config's for the fwd/dQ grids,
+    `default_semantics` verbatim where the grid has mandatory-sequential
+    dims (dK/dV's innermost g). Triton gets num_warps / num_stages."""
+    if interpret or config is None:
+        return None
+    backend = compiled_backend()
+    if backend == "tpu":
+        sem = default_semantics
+        if config.dimension_semantics is not None and \
+                default_semantics is not None and \
+                "arbitrary" not in default_semantics:
+            rank = len(default_semantics)
+            sem = tuple(config.dimension_semantics)[:rank]
+            sem += ("arbitrary",) * (rank - len(sem))
+        if sem is None:
+            return None
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+    if backend == "gpu":
+        from jax.experimental.pallas import triton as pltriton
+        kw = {}
+        if config.num_warps is not None:
+            kw["num_warps"] = int(config.num_warps)
+        if config.num_stages is not None:
+            kw["num_stages"] = int(config.num_stages)
+        return pltriton.TritonCompilerParams(**kw) if kw else None
+    return None
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(col_ref, nvalid_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
-                lse_ref, m_ref, l_ref, acc_ref, *, block, hd, K, seq_len,
-                scale, causal, sliding_window):
+def _fwd_kernel(col_ref, nvalid_ref, off_ref, q_ref, k_hbm, v_hbm, o_ref,
+                lse_ref, kbuf, vbuf, ksem, vsem, *, block, hd, K, depth,
+                seq_len, scale, causal, sliding_window):
+    n = pl.program_id(0)
     r = pl.program_id(2)
-    c = pl.program_id(3)
+    nv = nvalid_ref[r]
 
-    @pl.when(c == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def kv_copies(slot, i):
+        c = col_ref[r, i]
+        src = pl.ds(c * block, block)
+        return (pltpu.make_async_copy(k_hbm.at[n, src, :], kbuf.at[slot],
+                                      ksem.at[slot]),
+                pltpu.make_async_copy(v_hbm.at[n, src, :], vbuf.at[slot],
+                                      vsem.at[slot]))
 
-    @pl.when(c < nvalid_ref[r])
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)      # (B, hd)
-        k = k_ref[0].astype(jnp.float32)         # (B, hd)
+    # prologue: fill the ring (depth-1 fetches in flight before compute)
+    for j in range(min(depth - 1, K)):
+        for cp in kv_copies(j, j):
+            cp.start()
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (B, hd)
+
+    def step(i, carry):
+        m_prev, l_prev, acc = carry
+        ahead = i + depth - 1
+
+        @pl.when(ahead < K)
+        def _prefetch():
+            # the slot iteration i-1 just drained (= ahead % depth)
+            for cp in kv_copies(jax.lax.rem(ahead, depth), ahead):
+                cp.start()
+
+        slot = jax.lax.rem(i, depth)
+        for cp in kv_copies(slot, i):
+            cp.wait()
+        k = kbuf[slot].astype(jnp.float32)       # (B, hd)
+        v = vbuf[slot].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        ok = _tile_mask(r + off_ref[0], col_ref[r, c] + off_ref[1], block,
+        ok = _tile_mask(r + off_ref[0], col_ref[r, i] + off_ref[1], block,
                         causal, sliding_window)
+        # entries past nvalid are fetched (uniform DMA schedule) but are
+        # exact no-ops on the flash carry: s=NEG keeps m, alpha=exp(0)=1,
+        # p=0 adds nothing to l or acc
+        ok &= jnp.full((block, block), i < nv)
         s = jnp.where(ok, s, NEG)
-
-        m_prev = m_ref[:, 0]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         alpha = jnp.exp(m_prev - m_new)                     # rescale factor
-        p = jnp.exp(s - m_new[:, None])
-        p = jnp.where(ok, p, 0.0)
-        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, -1)
-        v = v_ref[0].astype(jnp.float32)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        m_ref[:, 0] = m_new
+        return m_new, l_new, acc
 
-    @pl.when(c == K - 1)
-    def _finish():
-        m = m_ref[:, 0]
-        l = l_ref[:, 0]
-        # Alg. 6 line 15 zero-correction: pruned positions count exp(0 - m).
-        # Row positions are GLOBAL (off_ref[0] rebases seq-shard-local rows).
-        rows = (r + off_ref[0]) * block + \
-            jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
-        if causal:
-            rt = (rows + 1).astype(jnp.float32)
-            if sliding_window is not None:
-                rt = jnp.minimum(rt, float(sliding_window))
-        else:
-            rt = jnp.full((block,), float(seq_len))
-        # stored counts come from the same masks; recompute per active tile
-        stored = jnp.zeros((block,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(
+        0, K, step, (jnp.full((block,), NEG, jnp.float32),
+                     jnp.zeros((block,), jnp.float32),
+                     jnp.zeros((block, hd), jnp.float32)))
 
-        def count(i, acc):
-            ok = _tile_mask(r + off_ref[0], col_ref[r, i] + off_ref[1], block,
-                            causal, sliding_window)
-            ok &= jnp.full((block, block), i < nvalid_ref[r])
-            return acc + jnp.sum(ok.astype(jnp.float32), -1)
+    # Alg. 6 line 15 zero-correction: pruned positions count exp(0 - m).
+    # Row positions are GLOBAL (off_ref[0] rebases seq-shard-local rows).
+    rows = (r + off_ref[0]) * block + \
+        jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    if causal:
+        rt = (rows + 1).astype(jnp.float32)
+        if sliding_window is not None:
+            rt = jnp.minimum(rt, float(sliding_window))
+    else:
+        rt = jnp.full((block,), float(seq_len))
+    # stored counts come from the same masks; recompute per active tile
 
-        stored = jax.lax.fori_loop(0, K, count, stored)
-        denom = l + jnp.maximum(rt - stored, 0.0) * jnp.exp(-m)
-        safe = jnp.where(denom == 0.0, 1.0, denom)
-        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
-        # rows with truly empty denominators get lse=+inf -> p = 0 in bwd
-        lse_ref[0, 0] = jnp.where(denom > 0.0, m + jnp.log(safe), jnp.inf)
+    def count(i, acc_):
+        ok = _tile_mask(r + off_ref[0], col_ref[r, i] + off_ref[1], block,
+                        causal, sliding_window)
+        ok &= jnp.full((block, block), i < nv)
+        return acc_ + jnp.sum(ok.astype(jnp.float32), -1)
+
+    stored = jax.lax.fori_loop(0, K, count, jnp.zeros((block,), jnp.float32))
+    denom = l + jnp.maximum(rt - stored, 0.0) * jnp.exp(-m)
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    o_ref[0, 0] = (acc / safe[:, None]).astype(o_ref.dtype)
+    # rows with truly empty denominators get lse=+inf -> p = 0 in bwd
+    lse_ref[0, 0] = jnp.where(denom > 0.0, m + jnp.log(safe), jnp.inf)
 
 
 def _zero_offsets():
@@ -148,40 +225,42 @@ def _zero_offsets():
 
 
 def _fused_forward(q, k, v, col_idx, nvalid, *, block, causal, sliding_window,
-                   interpret, offsets=None, seq_len=None):
+                   interpret, offsets=None, seq_len=None, config=None):
     """Returns (o (N, G, S, hd), lse (N, G, S) fp32). `S` is the local row
     count; `seq_len` (default S) is the GLOBAL sequence length used by the
     non-causal zero-correction, and `offsets` the [row0, col0] rebasing of
     local block indices to global ones (see module docstring)."""
     N, G, S, hd = q.shape
     nrb, K = col_idx.shape
+    config = DEFAULT_CONFIG if config is None else config
+    depth = _depth(config, K)
     offsets = _zero_offsets() if offsets is None else offsets
     scale = 1.0 / np.sqrt(hd)
     kern = functools.partial(_fwd_kernel, block=block, hd=hd, K=K,
+                             depth=depth,
                              seq_len=S if seq_len is None else int(seq_len),
                              scale=scale, causal=causal,
                              sliding_window=sliding_window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(N, G, nrb, K),
+        grid=(N, G, nrb),
         in_specs=[
             pl.BlockSpec((1, 1, block, hd),
-                         lambda n, g, r, c, col, nv, off: (n, g, r, 0)),
-            pl.BlockSpec((1, block, hd),
-                         lambda n, g, r, c, col, nv, off: (n, col[r, c], 0)),
-            pl.BlockSpec((1, block, hd),
-                         lambda n, g, r, c, col, nv, off: (n, col[r, c], 0)),
+                         lambda n, g, r, col, nv, off: (n, g, r, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # K stays in HBM: DMA ring
+            pl.BlockSpec(memory_space=pltpu.ANY),   # V stays in HBM: DMA ring
         ],
         out_specs=[
             pl.BlockSpec((1, 1, block, hd),
-                         lambda n, g, r, c, col, nv, off: (n, g, r, 0)),
+                         lambda n, g, r, col, nv, off: (n, g, r, 0)),
             pl.BlockSpec((1, 1, block),
-                         lambda n, g, r, c, col, nv, off: (n, g, r)),
+                         lambda n, g, r, col, nv, off: (n, g, r)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((block, 1), jnp.float32),    # running max
-            pltpu.VMEM((block, 1), jnp.float32),    # running sum
-            pltpu.VMEM((block, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((depth, block, hd), k.dtype),    # K tile ring
+            pltpu.VMEM((depth, block, hd), v.dtype),    # V tile ring
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
         ],
     )
     return pl.pallas_call(
@@ -189,6 +268,8 @@ def _fused_forward(q, k, v, col_idx, nvalid, *, block, causal, sliding_window,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((N, G, S, hd), q.dtype),
                    jax.ShapeDtypeStruct((N, G, S), jnp.float32)],
+        compiler_params=_compiler_params(config, interpret,
+                                         ("parallel",) * 3),
         interpret=interpret,
     )(col_idx, nvalid, offsets, q, k, v)
 
@@ -197,66 +278,94 @@ def _fused_forward(q, k, v, col_idx, nvalid, *, block, causal, sliding_window,
 # backward: dQ  (row-block grid, streams active KV tiles — forward's twin)
 # ---------------------------------------------------------------------------
 
-def _dq_kernel(col_ref, nvalid_ref, off_ref, q_ref, k_ref, v_ref, do_ref,
-               lse_ref, delta_ref, dq_ref, acc_ref, *, block, K, scale,
-               causal, sliding_window):
+def _dq_kernel(col_ref, nvalid_ref, off_ref, q_ref, k_hbm, v_hbm, do_ref,
+               lse_ref, delta_ref, dq_ref, kbuf, vbuf, ksem, vsem, *, block,
+               hd, K, depth, scale, causal, sliding_window):
+    n = pl.program_id(0)
     r = pl.program_id(2)
-    c = pl.program_id(3)
+    nv = nvalid_ref[r]
 
-    @pl.when(c == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def kv_copies(slot, i):
+        c = col_ref[r, i]
+        src = pl.ds(c * block, block)
+        return (pltpu.make_async_copy(k_hbm.at[n, src, :], kbuf.at[slot],
+                                      ksem.at[slot]),
+                pltpu.make_async_copy(v_hbm.at[n, src, :], vbuf.at[slot],
+                                      vsem.at[slot]))
 
-    @pl.when(c < nvalid_ref[r])
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)       # (B, hd)
-        k = k_ref[0].astype(jnp.float32)          # (B, hd)
-        v = v_ref[0].astype(jnp.float32)          # (B, hd)
-        do = do_ref[0, 0].astype(jnp.float32)     # (B, hd)
-        lse = lse_ref[0, 0]                       # (B,)
-        delta = delta_ref[0, 0]                   # (B,)
+    for j in range(min(depth - 1, K)):
+        for cp in kv_copies(j, j):
+            cp.start()
+
+    q = q_ref[0, 0].astype(jnp.float32)       # (B, hd)
+    do = do_ref[0, 0].astype(jnp.float32)     # (B, hd)
+    lse = lse_ref[0, 0]                       # (B,)
+    delta = delta_ref[0, 0]                   # (B,)
+
+    def step(i, acc):
+        ahead = i + depth - 1
+
+        @pl.when(ahead < K)
+        def _prefetch():
+            for cp in kv_copies(jax.lax.rem(ahead, depth), ahead):
+                cp.start()
+
+        slot = jax.lax.rem(i, depth)
+        for cp in kv_copies(slot, i):
+            cp.wait()
+        k = kbuf[slot].astype(jnp.float32)    # (B, hd)
+        v = vbuf[slot].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        ok = _tile_mask(r + off_ref[0], col_ref[r, c] + off_ref[1], block,
+        ok = _tile_mask(r + off_ref[0], col_ref[r, i] + off_ref[1], block,
                         causal, sliding_window)
+        ok &= jnp.full((block, block), i < nv)      # padded entries: ds = 0
         p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta[:, None])
-        acc_ref[...] += jax.lax.dot_general(
+        return acc + jax.lax.dot_general(
             ds, k, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
 
-    @pl.when(c == K - 1)
-    def _finish():
-        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+    acc = jax.lax.fori_loop(0, K, step, jnp.zeros((block, hd), jnp.float32))
+    dq_ref[0, 0] = acc.astype(dq_ref.dtype)
 
 
 def _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, *, block, causal,
-              sliding_window, interpret, offsets=None):
+              sliding_window, interpret, offsets=None, config=None):
     N, G, S, hd = q.shape
     nrb, K = col_idx.shape
+    config = DEFAULT_CONFIG if config is None else config
+    depth = _depth(config, K)
     offsets = _zero_offsets() if offsets is None else offsets
     scale = 1.0 / np.sqrt(hd)
-    kern = functools.partial(_dq_kernel, block=block, K=K, scale=scale,
-                             causal=causal, sliding_window=sliding_window)
+    kern = functools.partial(_dq_kernel, block=block, hd=hd, K=K, depth=depth,
+                             scale=scale, causal=causal,
+                             sliding_window=sliding_window)
     qspec = pl.BlockSpec((1, 1, block, hd),
-                         lambda n, g, r, c, col, nv, off: (n, g, r, 0))
-    kvspec = pl.BlockSpec((1, block, hd),
-                          lambda n, g, r, c, col, nv, off: (n, col[r, c], 0))
+                         lambda n, g, r, col, nv, off: (n, g, r, 0))
+    anyspec = pl.BlockSpec(memory_space=pltpu.ANY)
     rowspec = pl.BlockSpec((1, 1, block),
-                           lambda n, g, r, c, col, nv, off: (n, g, r))
+                           lambda n, g, r, col, nv, off: (n, g, r))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(N, G, nrb, K),
-        in_specs=[qspec, kvspec, kvspec, qspec, rowspec, rowspec],
+        grid=(N, G, nrb),
+        in_specs=[qspec, anyspec, anyspec, qspec, rowspec, rowspec],
         out_specs=qspec,
-        scratch_shapes=[pltpu.VMEM((block, hd), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((depth, block, hd), k.dtype),
+            pltpu.VMEM((depth, block, hd), v.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((N, G, S, hd), jnp.float32),
+        compiler_params=_compiler_params(config, interpret,
+                                         ("parallel",) * 3),
         interpret=interpret,
     )(col_idx, nvalid, offsets, q, k, v, do, lse, delta)
 
@@ -265,77 +374,127 @@ def _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, *, block, causal,
 # backward: dK/dV  (column-block grid over the transposed BCSR tables)
 # ---------------------------------------------------------------------------
 
-def _dkv_kernel(row_ref, nvt_ref, off_ref, q_ref, k_ref, v_ref, do_ref,
-                lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, block,
-                KT, G, scale, causal, sliding_window):
+def _dkv_kernel(row_ref, nvt_ref, off_ref, q_hbm, k_ref, v_ref, do_hbm,
+                lse_hbm, delta_hbm, dk_ref, dv_ref, dk_acc, dv_acc, qbuf,
+                dobuf, lsebuf, dltbuf, qsem, dosem, lsesem, dltsem, *, block,
+                hd, KT, G, depth, scale, causal, sliding_window):
+    n = pl.program_id(0)
     c = pl.program_id(1)
-    t = pl.program_id(2)
-    g = pl.program_id(3)
+    g = pl.program_id(2)
+    nvt = nvt_ref[c]
 
-    @pl.when((t == 0) & (g == 0))
+    def row_copies(slot, t):
+        r = row_ref[c, t]
+        src = pl.ds(r * block, block)
+        return (pltpu.make_async_copy(q_hbm.at[n, g, src, :], qbuf.at[slot],
+                                      qsem.at[slot]),
+                pltpu.make_async_copy(do_hbm.at[n, g, src, :], dobuf.at[slot],
+                                      dosem.at[slot]),
+                pltpu.make_async_copy(lse_hbm.at[n, g, src], lsebuf.at[slot],
+                                      lsesem.at[slot]),
+                pltpu.make_async_copy(delta_hbm.at[n, g, src],
+                                      dltbuf.at[slot], dltsem.at[slot]))
+
+    @pl.when(g == 0)
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    @pl.when(t < nvt_ref[c])
-    def _step():
+    for j in range(min(depth - 1, KT)):
+        for cp in row_copies(j, j):
+            cp.start()
+
+    k = k_ref[0].astype(jnp.float32)          # (B, hd) column block c
+    v = v_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        dk, dv = carry
+        ahead = t + depth - 1
+
+        @pl.when(ahead < KT)
+        def _prefetch():
+            for cp in row_copies(jax.lax.rem(ahead, depth), ahead):
+                cp.start()
+
+        slot = jax.lax.rem(t, depth)
+        for cp in row_copies(slot, t):
+            cp.wait()
         r = row_ref[c, t]
-        q = q_ref[0, 0].astype(jnp.float32)       # (B, hd) rows of block r
-        k = k_ref[0].astype(jnp.float32)          # (B, hd) column block c
-        v = v_ref[0].astype(jnp.float32)
-        do = do_ref[0, 0].astype(jnp.float32)
-        lse = lse_ref[0, 0]
-        delta = delta_ref[0, 0]
+        q = qbuf[slot].astype(jnp.float32)    # (B, hd) rows of block r
+        do = dobuf[slot].astype(jnp.float32)
+        lse = lsebuf[slot]
+        delta = dltbuf[slot]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         ok = _tile_mask(r + off_ref[0], c + off_ref[1], block, causal,
                         sliding_window)
+        ok &= jnp.full((block, block), t < nvt)     # padded entries: p = 0
         p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta[:, None])
         # contract the q-row axis: dv_c += p^T dO_r ; dk_c += scale ds^T Q_r
-        dv_acc[...] += jax.lax.dot_general(
+        dv = dv + jax.lax.dot_general(
             p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        dk_acc[...] += jax.lax.dot_general(
+        dk = dk + jax.lax.dot_general(
             ds, q, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
+        return dk, dv
 
-    @pl.when((t == KT - 1) & (g == G - 1))
+    dk, dv = jax.lax.fori_loop(
+        0, KT, step, (jnp.zeros((block, hd), jnp.float32),
+                      jnp.zeros((block, hd), jnp.float32)))
+    dk_acc[...] += dk
+    dv_acc[...] += dv
+
+    @pl.when(g == G - 1)
     def _finish():
         dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
 def _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t, *, block, causal,
-               sliding_window, interpret, offsets=None):
+               sliding_window, interpret, offsets=None, config=None):
     N, G, S, hd = q.shape
     Sk = k.shape[1]
     ncb, KT = row_idx.shape
+    config = DEFAULT_CONFIG if config is None else config
+    depth = _depth(config, KT)
     offsets = _zero_offsets() if offsets is None else offsets
     scale = 1.0 / np.sqrt(hd)
-    kern = functools.partial(_dkv_kernel, block=block, KT=KT, G=G, scale=scale,
-                             causal=causal, sliding_window=sliding_window)
-    qspec = pl.BlockSpec((1, 1, block, hd),
-                         lambda n, c, t, g, row, nvt, off: (n, g, row[c, t], 0))
+    kern = functools.partial(_dkv_kernel, block=block, hd=hd, KT=KT, G=G,
+                             depth=depth, scale=scale, causal=causal,
+                             sliding_window=sliding_window)
+    anyspec = pl.BlockSpec(memory_space=pltpu.ANY)
     colspec = pl.BlockSpec((1, block, hd),
-                           lambda n, c, t, g, row, nvt, off: (n, c, 0))
-    rowspec = pl.BlockSpec((1, 1, block),
-                           lambda n, c, t, g, row, nvt, off: (n, g, row[c, t]))
+                           lambda n, c, g, row, nvt, off: (n, c, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        # g innermost so every revisit of the (n, c) output tile is consecutive
-        grid=(N, ncb, KT, G),
-        in_specs=[qspec, colspec, colspec, qspec, rowspec, rowspec],
+        # g innermost so every revisit of the (n, c) output tile is
+        # consecutive (the scratch accumulators persist across g)
+        grid=(N, ncb, G),
+        in_specs=[anyspec, colspec, colspec, anyspec, anyspec, anyspec],
         out_specs=[colspec, colspec],
-        scratch_shapes=[pltpu.VMEM((block, hd), jnp.float32),
-                        pltpu.VMEM((block, hd), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((block, hd), jnp.float32),       # dk accumulator
+            pltpu.VMEM((block, hd), jnp.float32),       # dv accumulator
+            pltpu.VMEM((depth, block, hd), q.dtype),    # Q row-slice ring
+            pltpu.VMEM((depth, block, hd), do.dtype),   # dO row-slice ring
+            pltpu.VMEM((depth, block), jnp.float32),    # lse ring
+            pltpu.VMEM((depth, block), jnp.float32),    # delta ring
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((N, Sk, hd), jnp.float32),
                    jax.ShapeDtypeStruct((N, Sk, hd), jnp.float32)],
+        compiler_params=_compiler_params(
+            config, interpret, ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(row_idx, nvalid_t, offsets, q, k, v, do, lse, delta)
 
@@ -350,15 +509,20 @@ def _int_zero(x):
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_op(block, causal, sliding_window, interpret, with_plan, seq_len):
+def _fused_op(block, causal, sliding_window, interpret, with_plan, seq_len,
+              config):
     """One differentiable fused-attention op per static config (cached so the
     custom_vjp identity is stable across traces).
 
     with_plan=True takes precomputed transposed tables (row_idx, nvalid_t)
     as extra primal inputs — the host-built SparsityPlan path: the dK/dV
-    grid width is row_idx.shape[1] = KT* (true max column population) and no
-    bcsr_transpose runs under jit. with_plan=False is the fallback that
-    rebuilds the transposed tables in every backward at width KT = nrb.
+    streaming width is row_idx.shape[1] = KT* (true max column population)
+    and no bcsr_transpose runs under jit. with_plan=False is the fallback
+    that rebuilds the transposed tables in every backward at width KT = nrb.
+
+    `config` is the (hashable) KernelConfig the autotuner resolved — part
+    of the cache key, so differently-tuned call sites get distinct compiled
+    kernels while identical configs share one.
 
     Every op additionally takes the `offs = [row0, col0]` block-index
     rebasing as an int32 primal (float0 cotangent); seq_len=None means "use
@@ -366,7 +530,8 @@ def _fused_op(block, causal, sliding_window, interpret, with_plan, seq_len):
     """
     fwd_ = functools.partial(_fused_forward, block=block, causal=causal,
                              sliding_window=sliding_window,
-                             interpret=interpret, seq_len=seq_len)
+                             interpret=interpret, seq_len=seq_len,
+                             config=config)
 
     def bwd_core(q, k, v, col_idx, nvalid, offs, o, lse, do, row_idx,
                  nvalid_t):
@@ -375,11 +540,11 @@ def _fused_op(block, causal, sliding_window, interpret, with_plan, seq_len):
         delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
         dq = _fused_dq(q, k, v, do, lse, delta, col_idx, nvalid, block=block,
                        causal=causal, sliding_window=sliding_window,
-                       interpret=interpret, offsets=offs)
+                       interpret=interpret, offsets=offs, config=config)
         dk, dv = _fused_dkv(q, k, v, do, lse, delta, row_idx, nvalid_t,
                             block=block, causal=causal,
                             sliding_window=sliding_window, interpret=interpret,
-                            offsets=offs)
+                            offsets=offs, config=config)
         return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
     if with_plan:
@@ -426,19 +591,24 @@ def _fused_op(block, causal, sliding_window, interpret, with_plan, seq_len):
 def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
                                  causal=False, sliding_window=None,
                                  interpret=None, row_idx=None, nvalid_t=None,
-                                 offsets=None, seq_len=None):
+                                 offsets=None, seq_len=None, config=None):
     """q (N, G, S, hd) — G query heads share each kv head; k, v (N, Sk, hd);
     col_idx (nrb, K) clamped, nvalid (nrb,). Returns (N, G, S, hd).
 
     Differentiable: jax.grad flows through Pallas dQ / dK/dV kernels (dK/dV
     sum over the G query heads of each kv head). `interpret=None` resolves
-    from the platform (compiled on TPU, interpreter elsewhere).
+    from the platform (compiled on TPU/GPU, interpreter elsewhere).
+
+    `config` is a dispatch.KernelConfig — normally the one the autotuner
+    cached for this pattern (kernels/autotune.py); None means the default
+    double-buffered schedule. Configs change only scheduling, never
+    results.
 
     When a host-built SparsityPlan supplies `row_idx (ncb, KT*)` and
-    `nvalid_t (ncb,)`, the dK/dV backward grid is (N, ncb, KT*, G) — sized
-    to the measured pattern — and no bcsr_transpose runs under jit. Without
-    them the backward falls back to the under-jit transpose at the
-    always-safe width KT = ncb.
+    `nvalid_t (ncb,)`, the dK/dV backward streams KT* entries per column
+    block — sized to the measured pattern — and no bcsr_transpose runs
+    under jit. Without them the backward falls back to the under-jit
+    transpose at the always-safe width KT = ncb.
 
     Sequence-parallel callers (kernels/sharded.py seq mode) pass local
     tables, `offsets = [row0, col0]` (int32 (2,), the global block index of
@@ -461,10 +631,14 @@ def fused_block_sparse_attention(q, k, v, col_idx, nvalid, *, block,
             f"kernels.ops.spion_attention_kernel (mesh-aware) or "
             f"kernels.sharded.sharded_fused_attention, or use the jnp BCSR "
             f"path (cfg.spion.kernel='jnp').")
+    if config is not None and not isinstance(config, KernelConfig):
+        raise TypeError(f"config must be a dispatch.KernelConfig or None, "
+                        f"got {type(config).__name__}")
     op = _fused_op(int(block), bool(causal),
                    None if sliding_window is None else int(sliding_window),
                    default_interpret(interpret), row_idx is not None,
-                   None if seq_len is None else int(seq_len))
+                   None if seq_len is None else int(seq_len),
+                   DEFAULT_CONFIG if config is None else config)
     offs = _zero_offsets() if offsets is None else offsets.astype(jnp.int32)
     if row_idx is not None:
         return op(q, k, v, col_idx.astype(jnp.int32), nvalid.astype(jnp.int32),

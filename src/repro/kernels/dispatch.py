@@ -1,9 +1,21 @@
 """Platform-aware kernel dispatch knobs.
 
 `interpret=None` everywhere in this package means "resolve from the
-platform": Pallas kernels compile through Mosaic on TPU and fall back to the
-pure-Python interpreter elsewhere (CPU CI, dev laptops), so the same call
-sites run unchanged on both. Pass an explicit bool to override.
+platform": Pallas kernels lower through a real compiler on COMPILED
+backends — Mosaic on TPU, Triton on GPU — and fall back to the pure-Python
+interpreter only where no compiled lane exists (CPU CI, dev laptops), so
+the same call sites run unchanged everywhere. Pass an explicit bool to
+override. GPU deliberately counts as compiled: dropping a CUDA host to the
+interpreter would silently throw away the wall-clock the kernels exist for;
+if a kernel cannot lower on a backend the failure must be loud, not a
+silent 100x slowdown.
+
+Also home of `KernelConfig` — the hashable per-kernel tuning knob bundle
+(DMA pipeline depth, Mosaic dimension semantics, Triton num_warps /
+num_stages) swept by kernels/autotune.py and threaded as a jit-static
+through ops/block_sparse_attn/sharded. It lives here, not in autotune.py,
+because block_sparse_attn needs the type and autotune imports
+block_sparse_attn (import-acyclic).
 
 Also home of the shard_map-body marker: `pallas_call` has no GSPMD
 partitioning rule, so under a multi-device mesh the fused kernel is only
@@ -17,12 +29,71 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import dataclasses
 import functools
 
 import jax
 
 _IN_SHARDED_BODY: contextvars.ContextVar[bool] = contextvars.ContextVar(
     "repro_in_sharded_kernel_body", default=False)
+
+# backends with a real Pallas compiler lane (Mosaic / Triton). Everything
+# else (cpu, METAL, ...) resolves interpret=None to the interpreter.
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One point in the fused-kernel tuning space (kernels/autotune.py).
+
+    Hashable and immutable: it rides jit static_argnames, the _fused_op
+    lru_cache key, and SparseAttentionExec pytree aux, so two execs with
+    different tuned configs trace separately and identical configs share
+    the compiled kernel.
+
+      depth               K/V (bwd: Q/dO/lse/delta) DMA pipeline depth in
+                          block_sparse_attn — 1 is a synchronous fetch,
+                          2 the classic double buffer, 3+ deeper rings.
+      dimension_semantics Mosaic grid annotation for the fwd/dQ grids
+                          (None -> all-parallel). The dK/dV grid pins its
+                          own (g must stay sequential for the scratch
+                          accumulators).
+      num_warps/num_stages Triton lowering knobs (GPU); None -> compiler
+                          defaults. Ignored by Mosaic and the interpreter.
+
+    Changing a config can only ever change SPEED: every field controls
+    scheduling (prefetch distance, grid parallelism, warp mapping), never
+    the operation order inside a block, so tuned and default outputs are
+    bitwise identical (tests/test_autotune.py holds this line).
+    """
+    depth: int = 2
+    dimension_semantics: tuple | None = None
+    num_warps: int | None = None
+    num_stages: int | None = None
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.dimension_semantics is not None:
+            d["dimension_semantics"] = list(self.dimension_semantics)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown KernelConfig fields: {sorted(unknown)}")
+        kw = dict(d)
+        if kw.get("dimension_semantics") is not None:
+            kw["dimension_semantics"] = tuple(kw["dimension_semantics"])
+        cfg = cls(**kw)
+        if not isinstance(cfg.depth, int) or cfg.depth < 1:
+            raise ValueError(f"KernelConfig.depth must be an int >= 1, "
+                             f"got {cfg.depth!r}")
+        return cfg
+
+
+DEFAULT_CONFIG = KernelConfig()
 
 
 @contextlib.contextmanager
@@ -41,7 +112,25 @@ def in_sharded_body() -> bool:
 
 @functools.lru_cache(maxsize=1)
 def _platform_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # interpret only where there is NO compiled lane — GPU (Triton) is a
+    # compiled backend exactly like TPU (Mosaic), not an interpreter host.
+    return jax.default_backend() not in COMPILED_BACKENDS
+
+
+def compiled_backend() -> str | None:
+    """The compiled-lane name for this host ("tpu" / "gpu") or None.
+
+    cuda/rocm normalise to "gpu" — both lower through Triton."""
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return "tpu"
+    if backend in ("gpu", "cuda", "rocm"):
+        return "gpu"
+    return None
+
+
+def is_compiled_backend() -> bool:
+    return compiled_backend() is not None
 
 
 def default_interpret(interpret=None) -> bool:

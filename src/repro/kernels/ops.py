@@ -2,13 +2,15 @@
 
 `spion_attention_kernel(...)` is a drop-in for core.sparse_attention.
 bcsr_attention with use_pallas semantics: handles GQA head grouping, BCSR
-table clamping, and dispatches either the paper-faithful 3-kernel pipeline
-or the fused flash-style kernel.
+table clamping, and dispatches the single-pass fused flash-style kernel —
+the ONLY production kernel path (DESIGN.md §15). The paper-faithful
+3-kernel SDDMM -> sparse softmax -> SpMM pipeline was demoted to the
+pure-jnp oracle in kernels/ref.py: it exists to check the fused kernel in
+parity tests and to reproduce the Fig. 6 breakdown, not to serve traffic.
 
 The fused path is differentiable (custom VJP with Pallas backward kernels,
 see block_sparse_attn.py) — it is the path the sparse training phase runs
-through. The 3-kernel pipeline stays forward-only (it exists to reproduce
-the paper's Fig. 6 breakdown, not to train).
+through.
 
 Mesh-aware: under an active multi-device mesh (distributed.sharding.
 current_mesh()) the fused path routes through the shard_map wrapper
@@ -18,13 +20,14 @@ pallas_call has no GSPMD partitioning rule, so the only alternatives under
 a mesh are the jnp BCSR path or silently replicated kernel work; the
 latter fails loudly (block_sparse_attn guard).
 
-interpret=None resolves from the platform: compiled on TPU, Pallas
-interpreter on CPU (CI) — the same call sites work on both.
+interpret=None resolves from the platform: compiled on TPU (Mosaic) and
+GPU (Triton), Pallas interpreter only where no compiled lane exists (CPU
+CI) — the same call sites work everywhere.
 
 The jits here are keyed ONLY on the kernel statics (causal, sliding_window,
-block, fused, interpret) — never on the whole ModelConfig, so unrelated
-config changes (act_shard, bench sweeps, dtype knobs) don't retrace the
-kernel.
+block, interpret, and the autotuned KernelConfig) — never on the whole
+ModelConfig, so unrelated config changes (act_shard, bench sweeps, dtype
+knobs) don't retrace the kernel.
 """
 from __future__ import annotations
 
@@ -36,9 +39,6 @@ import jax.numpy as jnp
 from repro.distributed.sharding import current_mesh
 from repro.kernels.block_sparse_attn import fused_block_sparse_attention
 from repro.kernels.dispatch import default_interpret
-from repro.kernels.sddmm import sddmm
-from repro.kernels.sparse_softmax import sparse_softmax
-from repro.kernels.spmm import spmm
 
 
 def _prep_tables(bcsr):
@@ -76,75 +76,64 @@ def _merge_heads(o, dims):
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
-                                             "block", "fused", "interpret"))
+                                             "block", "interpret", "config"))
 def _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t, *, causal,
-              sliding_window, block, fused, interpret):
+              sliding_window, block, interpret, config):
     qh, kh, vh, dims = _split_heads(q, k, v)
     B, S, H, hd, KV, G = dims
     qf, kf, vf = _flatten_bk(qh, kh, vh, dims)
-    if fused:
-        o = fused_block_sparse_attention(qf, kf, vf, col, nvalid, block=block,
-                                         causal=causal,
-                                         sliding_window=sliding_window,
-                                         interpret=interpret,
-                                         row_idx=row_idx, nvalid_t=nvalid_t)
-        return _merge_heads(o.reshape(B, KV, G, S, hd), dims)
-    qff = qf.reshape(B * KV * G, S, hd)
-    kff = jnp.repeat(kf, G, axis=0) if G > 1 else kf
-    vff = jnp.repeat(vf, G, axis=0) if G > 1 else vf
-    s = sddmm(qff, kff, col, nvalid, block=block, causal=causal,
-              sliding_window=sliding_window, interpret=interpret)
-    p = sparse_softmax(s, col, nvalid, block=block, seq_len=S, causal=causal,
-                       sliding_window=sliding_window, interpret=interpret)
-    o = spmm(p, vff, col, nvalid, block=block, interpret=interpret)
+    o = fused_block_sparse_attention(qf, kf, vf, col, nvalid, block=block,
+                                     causal=causal,
+                                     sliding_window=sliding_window,
+                                     interpret=interpret,
+                                     row_idx=row_idx, nvalid_t=nvalid_t,
+                                     config=config)
     return _merge_heads(o.reshape(B, KV, G, S, hd), dims)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "causal",
                                              "sliding_window", "block",
-                                             "interpret", "halo"))
+                                             "interpret", "halo", "config"))
 def _dispatch_sharded(q, k, v, col, nvalid, row_idx, nvalid_t, *, mesh,
-                      causal, sliding_window, block, interpret, halo):
+                      causal, sliding_window, block, interpret, halo, config):
     from repro.kernels.sharded import sharded_fused_attention
     qh, kh, vh, dims = _split_heads(q, k, v)
     o = sharded_fused_attention(mesh, qh, kh, vh, col, nvalid, block=block,
                                 causal=causal, sliding_window=sliding_window,
                                 interpret=interpret, row_idx=row_idx,
-                                nvalid_t=nvalid_t, halo=halo)
+                                nvalid_t=nvalid_t, halo=halo, config=config)
     return _merge_heads(o, dims)
 
 
-def spion_attention_kernel(cfg, q, k, v, bcsr, *, fused=True, interpret=None,
-                           row_idx=None, nvalid_t=None, halo=None):
+def spion_attention_kernel(cfg, q, k, v, bcsr, *, interpret=None,
+                           row_idx=None, nvalid_t=None, halo=None,
+                           config=None):
     """Pallas-kernel counterpart of core.sparse_attention.bcsr_attention.
-    With fused=True the result is differentiable (sparse backward kernels).
+    The result is differentiable (sparse backward kernels); the single-pass
+    fused kernel is the only path here — the legacy 3-kernel pipeline lives
+    on solely as the kernels/ref.py oracle.
     `row_idx`/`nvalid_t` are a SparsityPlan's precomputed transposed tables
-    (width KT*); supplying them shrinks the dK/dV backward grid to the true
-    pattern width and removes the per-step under-jit bcsr_transpose.
-    `halo` is the plan's static (left, right) column extent in block units —
-    it unlocks 'seq'-axis sharding under a sequence-parallel mesh
-    (kernels/sharded.py).
+    (width KT*); supplying them shrinks the dK/dV backward streaming width
+    to the true pattern width and removes the per-step under-jit
+    bcsr_transpose. `halo` is the plan's static (left, right) column extent
+    in block units — it unlocks 'seq'-axis sharding under a
+    sequence-parallel mesh (kernels/sharded.py). `config` is the autotuned
+    dispatch.KernelConfig for this pattern (kernels/autotune.py) — a
+    jit-static scheduling knob that never changes results.
 
     Under an active multi-device mesh the fused path runs through the
-    shard_map wrapper; the 3-kernel pipeline (fused=False, forward-only) has
-    no sharded form and fails loudly there."""
+    shard_map wrapper."""
     col, nvalid = _prep_tables(bcsr)
     interp = default_interpret(interpret)
     mesh = current_mesh()
     if mesh is not None and mesh.size > 1:
-        if not fused:
-            raise RuntimeError(
-                "spion_attention_kernel(fused=False): the 3-kernel pipeline "
-                "is forward-only and has no shard_map wrapper; under a "
-                f"multi-device mesh {dict(mesh.shape)} it would run "
-                "replicated on every device. Use fused=True (sharded) or "
-                "the jnp BCSR path.")
         return _dispatch_sharded(q, k, v, col, nvalid, row_idx, nvalid_t,
                                  mesh=mesh, causal=cfg.causal,
                                  sliding_window=cfg.sliding_window,
                                  block=bcsr.block, interpret=interp,
                                  halo=None if halo is None else
-                                 (int(halo[0]), int(halo[1])))
+                                 (int(halo[0]), int(halo[1])),
+                                 config=config)
     return _dispatch(q, k, v, col, nvalid, row_idx, nvalid_t,
                      causal=cfg.causal, sliding_window=cfg.sliding_window,
-                     block=bcsr.block, fused=fused, interpret=interp)
+                     block=bcsr.block, interpret=interp, config=config)

@@ -82,15 +82,15 @@ def _op_cache_size() -> int:
 
 
 def _sharded_op(mesh: Mesh, baxes, kv_ax, seq, block, causal, sliding_window,
-                interpret, with_plan):
+                interpret, with_plan, config):
     key = (_mesh_key(mesh), baxes, kv_ax, seq, block, causal, sliding_window,
-           interpret, with_plan)
+           interpret, with_plan, config)
     op = _OP_CACHE.get(key)
     if op is not None:
         _OP_CACHE.move_to_end(key)
         return op
     op = _build_sharded_op(mesh, baxes, kv_ax, seq, block, causal,
-                           sliding_window, interpret, with_plan)
+                           sliding_window, interpret, with_plan, config)
     _OP_CACHE[key] = op
     while len(_OP_CACHE) > _OP_CACHE_MAX:
         _OP_CACHE.popitem(last=False)
@@ -98,7 +98,7 @@ def _sharded_op(mesh: Mesh, baxes, kv_ax, seq, block, causal, sliding_window,
 
 
 def _build_sharded_op(mesh, baxes, kv_ax, seq, block, causal, sliding_window,
-                      interpret, with_plan):
+                      interpret, with_plan, config):
     """`seq` is None (sequence unsharded, PR-3 behaviour) or a static
     (n_shards, halo_left, halo_right) triple in block units."""
     seq_ax = "seq" if seq is not None else None
@@ -110,7 +110,8 @@ def _build_sharded_op(mesh, baxes, kv_ax, seq, block, causal, sliding_window,
             B, KV, G, S, hd = q.shape  # shard-LOCAL sizes
             row_idx, nvalid_t = plan if with_plan else (None, None)
             kw = dict(block=block, causal=causal,
-                      sliding_window=sliding_window, interpret=interpret)
+                      sliding_window=sliding_window, interpret=interpret,
+                      config=config)
             if seq is None:
                 o = fused_block_sparse_attention(
                     q.reshape(B * KV, G, S, hd), k.reshape(B * KV, S, hd),
@@ -212,13 +213,18 @@ def _build_sharded_op(mesh, baxes, kv_ax, seq, block, causal, sliding_window,
 
 def sharded_fused_attention(mesh: Mesh, q, k, v, col_idx, nvalid, *, block,
                             causal=False, sliding_window=None, interpret=None,
-                            row_idx=None, nvalid_t=None, halo=None):
+                            row_idx=None, nvalid_t=None, halo=None,
+                            config=None):
     """shard_map'd `fused_block_sparse_attention` over `mesh`.
 
     q (B, KV, G, S, hd); k, v (B, KV, S, hd) — batch and KV heads as
     separate leading axes (ops._split_heads layout); tables as in
     `fused_block_sparse_attention`; interpret=None resolves from the
     platform (kernels/dispatch.py). Returns (B, KV, G, S, hd).
+
+    `config` is the autotuned dispatch.KernelConfig (or None for defaults);
+    it is part of the op-cache key, so differently-tuned patterns build
+    separate shard_map ops while identical configs share one.
 
     `halo` is the pattern's (left, right) column extent in block units
     (SparsityPlan stats["halo"]). When the mesh has a 'seq' axis and the
@@ -271,7 +277,8 @@ def sharded_fused_attention(mesh: Mesh, q, k, v, col_idx, nvalid, *, block,
             f"GSPMD path) or fix the batch/head divisibility.")
     op = _sharded_op(mesh, baxes, kv_ax, seq, int(block), bool(causal),
                      None if sliding_window is None else int(sliding_window),
-                     default_interpret(interpret), row_idx is not None)
+                     default_interpret(interpret), row_idx is not None,
+                     config)
     args = (q, k, v, col_idx, nvalid)
     if row_idx is not None:
         args += (row_idx, nvalid_t)

@@ -189,20 +189,26 @@ def spion_table_pspecs(tables):
             for k, v in tables.items()}
 
 
-def _coerce_step_tables(tables, *, block, halo, phase):
+def _coerce_step_tables(tables, *, block, halo, phase, kernel_config=None):
     """Normalise a step's sparse-tables argument to a SparseAttentionExec.
 
     An exec passes through untouched (it carries its own static metadata as
-    pytree aux, so it crosses jit boundaries intact). The legacy dict
-    payload is rebuilt with the STATIC block/halo closed over at step-build
-    time — its own int leaves would be tracers under jit — and filtered to
-    the PLAN_TABLE_KEYS arrays (dropping static scalars like kt_star)."""
+    pytree aux, so it crosses jit boundaries intact — including the
+    autotuned kernel_config resolved when it was built OUTSIDE jit). The
+    legacy dict payload is rebuilt with the STATIC block/halo/kernel_config
+    closed over at step-build time — its own int leaves would be tracers
+    under jit, and the autotune-cache lookup needs concrete tables, so this
+    under-jit construction never consults the cache itself — and filtered
+    to the PLAN_TABLE_KEYS arrays (dropping static scalars like kt_star).
+    Callers who want tuned dict payloads pass `kernel_config` to the step
+    maker (or, better, hand the step an exec)."""
     if tables is None:
         return None
     if isinstance(tables, SparseAttentionExec):
         return tables
     arrays = {k: tables[k] for k in PLAN_TABLE_KEYS if k in tables}
-    return SparseAttentionExec(arrays, block=block, halo=halo, phase=phase)
+    return SparseAttentionExec(arrays, block=block, halo=halo, phase=phase,
+                               kernel_config=kernel_config)
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +217,7 @@ def _coerce_step_tables(tables, *, block, halo, phase):
 
 def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
                     total_steps=10_000, n_micro=1, block=None,
-                    sparse_kernel=None, halo=None):
+                    sparse_kernel=None, halo=None, kernel_config=None):
     """Returns f(params_f32, opt_state, batch, step[, tables]) ->
     (params, opt_state, metrics). `spion` adds a sparse-tables argument:
     either a SparseAttentionExec (preferred — its static block/halo ride
@@ -237,7 +243,11 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
     (plan stats["halo"]); like `block` it is closed over at build time — an
     int leaf in the tables arg would turn into a tracer under jit. It
     unlocks 'seq'-axis sharding of the fused kernel when the mesh has one
-    (DESIGN.md §10); leaving it None just keeps the sequence unsharded."""
+    (DESIGN.md §10); leaving it None just keeps the sequence unsharded.
+
+    `kernel_config` is a kernels.dispatch.KernelConfig for dict-payload
+    callers (static, closed over like block/halo). Exec arguments carry
+    their own — resolved from the autotune cache at construction."""
     if sparse_kernel is not None:
         cfg = cfg.replace(spion=dataclasses_replace(cfg.spion,
                                                     kernel=sparse_kernel))
@@ -253,7 +263,8 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
         # through with its own statics in the pytree aux — so a new plan's
         # halo retraces the step with no caller-side rebuild tracking
         tables = _coerce_step_tables(tables, block=static_block,
-                                     halo=static_halo, phase="train")
+                                     halo=static_halo, phase="train",
+                                     kernel_config=kernel_config)
 
         def cast(p):
             return jax.tree_util.tree_map(
@@ -302,7 +313,7 @@ def make_train_step(cfg: ModelConfig, *, spion=False, seq_len=None, lr=3e-4,
 
 
 def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None,
-                      halo=None, with_cache=False):
+                      halo=None, with_cache=False, kernel_config=None):
     """Prefill step: logits over the full prompt. `with_cache=True` builds
     the FUSED serving prefill instead — (params, batch[, tables]) ->
     (logits, ks, vs) with ks/vs the per-layer RoPE'd K/V stacked
@@ -320,7 +331,8 @@ def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None,
 
     def prefill(params, batch, tables=None):
         ex = _coerce_step_tables(tables, block=static_block,
-                                 halo=static_halo, phase="prefill")
+                                 halo=static_halo, phase="prefill",
+                                 kernel_config=kernel_config)
         if with_cache:
             return bundle.prefill_kv(params, batch, spion=ex)
         logits, _ = bundle.forward(params, batch, spion=ex)
@@ -331,7 +343,8 @@ def make_prefill_step(cfg: ModelConfig, *, spion=False, block=None,
     return functools.partial(prefill, tables=None)
 
 
-def make_serve_step(cfg: ModelConfig, *, spion=False, block=None, halo=None):
+def make_serve_step(cfg: ModelConfig, *, spion=False, block=None, halo=None,
+                    kernel_config=None):
     """Decode step: (params, cache, tokens, pos[, tables]) -> (logits,
     cache). `pos` may be a scalar or per-row (B,) vector; with `spion` the
     attention families decode sparsely over the pattern-listed cache blocks
@@ -356,7 +369,8 @@ def make_serve_step(cfg: ModelConfig, *, spion=False, block=None, halo=None):
 
     def serve_step(params, cache, tokens, pos, tables=None):
         ex = _coerce_step_tables(tables, block=static_block,
-                                 halo=static_halo, phase="decode")
+                                 halo=static_halo, phase="decode",
+                                 kernel_config=kernel_config)
         return bundle.decode_step(params, cache, tokens, pos, spion=ex)
 
     if spion:

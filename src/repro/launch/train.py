@@ -456,7 +456,8 @@ def main():
     ap.add_argument("--sparse-kernel", default=None,
                     choices=["auto", "jnp", "fused"],
                     help="sparse-phase attention impl (default: cfg.spion.kernel; "
-                         "auto = fused Pallas kernel on TPU, jnp path elsewhere)")
+                         "auto = fused Pallas kernel where a compiled lane or "
+                         "shardable mesh dim exists, jnp path elsewhere)")
     ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
                     help="jax.distributed coordinator (or env SPION_COORDINATOR); "
                          "with --num-processes/--process-id this process joins "

@@ -197,12 +197,16 @@ with mesh_context(mesh):
         raise SystemExit("bare fused call under mesh must raise")
     except RuntimeError as e:
         assert "shard_map" in str(e), e
-    # 3-kernel pipeline has no sharded form
+    # the fused kernel is the only wrapper path — the legacy 3-kernel
+    # escape hatch is gone for good
     try:
         spion_attention_kernel(cfg, q, kv, kv, b, fused=False, interpret=True)
-        raise SystemExit("fused=False under mesh must raise")
-    except RuntimeError as e:
-        assert "forward-only" in str(e), e
+        raise SystemExit("fused kwarg must no longer exist")
+    except TypeError as e:
+        assert "fused" in str(e), e
+    # wrapper under mesh routes through shard_map and works
+    out_m = spion_attention_kernel(cfg, q, kv, kv, b, interpret=True)
+    assert out_m.shape == q.shape
     # nothing divides (B=3, KV=3 on a 2x2 mesh): auto falls back to jnp,
     # forcing fused raises
     q3 = jax.random.normal(jax.random.key(4), (3, S, 3, hd))
